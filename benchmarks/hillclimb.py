@@ -1,0 +1,87 @@
+"""§Perf hillclimb driver: runs the hypothesis->change->re-analyse ladder
+for the three selected cells and appends every variant to
+artifacts/hillclimb.jsonl.
+
+Cells (per the assignment's selection rule):
+  A. arctic-480b/decode_32k    — most representative of the paper's
+     technique (SAMD weight packing) AND the worst memory-roofline cell;
+     ladder: bf16 -> w8 -> w4 -> w2 -> w2+kv8.
+  B. zamba2-7b/prefill_32k     — most collective-bound at baseline
+     (FSDP weight re-gathers x81 layers);
+     ladder: FSDP baseline -> serve-mode 1-D sharding -> +seq-parallel
+     activations.
+  C. qwen1.5-32b/train_4k      — the big dense-train cell;
+     ladder: baseline -> seq-parallel activations -> grad-accum
+     microbatching (bsz/2 per microbatch halves live activations).
+
+Run AFTER the baseline sweep:
+  PYTHONPATH=src python -m benchmarks.hillclimb
+"""
+from __future__ import annotations
+
+import os
+
+os.environ.setdefault(
+    "XLA_FLAGS", "--xla_force_host_platform_device_count=512"
+)
+
+import json  # noqa: E402
+
+import jax  # noqa: E402
+
+
+VARIANTS = [
+    # --- Cell A: the paper's technique on its best target ---------------
+    dict(tag="A0-baseline-bf16", arch="arctic-480b", shape="decode_32k"),
+    dict(tag="A1-samd-w8", arch="arctic-480b", shape="decode_32k",
+         quant_bits=8),
+    dict(tag="A2-samd-w4", arch="arctic-480b", shape="decode_32k",
+         quant_bits=4),
+    dict(tag="A3-samd-w2", arch="arctic-480b", shape="decode_32k",
+         quant_bits=2),
+    dict(tag="A4-samd-w2-kv8", arch="arctic-480b", shape="decode_32k",
+         quant_bits=2, kv_bits=8),
+    # --- Cell B: collective-bound prefill --------------------------------
+    dict(tag="B0-baseline-fsdp", arch="zamba2-7b", shape="prefill_32k"),
+    dict(tag="B1-serve-sharding", arch="zamba2-7b", shape="prefill_32k",
+         mode_override="serve"),
+    dict(tag="B2-serve+seqacts", arch="zamba2-7b", shape="prefill_32k",
+         mode_override="serve", seq_shard_acts=True),
+    dict(tag="B3-serve+w4", arch="zamba2-7b", shape="prefill_32k",
+         mode_override="serve", quant_bits=4),
+    # --- Cell C: dense train ---------------------------------------------
+    dict(tag="C0-baseline", arch="qwen1.5-32b", shape="train_4k",
+         remat="block"),
+    dict(tag="C1-seq-parallel", arch="qwen1.5-32b", shape="train_4k",
+         remat="block", seq_shard_acts=True),
+    dict(tag="C2-no-remat", arch="qwen1.5-32b", shape="train_4k",
+         remat="none"),
+]
+
+
+def main(out="artifacts/hillclimb.jsonl"):
+    from repro.launch.dryrun import lower_cell
+
+    os.makedirs(os.path.dirname(out), exist_ok=True)
+    for v in VARIANTS:
+        v = dict(v)
+        tag = v.pop("tag")
+        arch = v.pop("arch")
+        shape = v.pop("shape")
+        print(f"\n######## {tag}: {arch}/{shape} {v} ########")
+        try:
+            r = lower_cell(arch, shape, **v)
+        except Exception as e:  # noqa: BLE001
+            import traceback
+
+            traceback.print_exc()
+            r = {"cell": f"{arch}/{shape}", "status": "FAILED",
+                 "error": str(e)}
+        r["tag"] = tag
+        with open(out, "a") as f:
+            f.write(json.dumps(r) + "\n")
+        jax.clear_caches()
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,81 @@
+"""Roofline table builder: reads the dry-run JSONL artifacts and renders
+the per-(arch x shape x mesh) table for EXPERIMENTS.md §Roofline."""
+from __future__ import annotations
+
+import json
+import os
+
+
+def load(path: str) -> list[dict]:
+    rows = []
+    if not os.path.exists(path):
+        return rows
+    with open(path) as f:
+        for line in f:
+            rows.append(json.loads(line))
+    return rows
+
+
+def fmt_ms(s: float) -> str:
+    return f"{s * 1e3:9.2f}"
+
+
+def render_table(rows: list[dict], mesh: str = "16x16") -> str:
+    out = [
+        "| cell | quant | compute ms | memory ms | collective ms | bound |"
+        " MODEL/ANALYTIC | fits 16GB |",
+        "|---|---|---:|---:|---:|---|---:|---|",
+    ]
+    for r in rows:
+        if r.get("mesh") != mesh:
+            continue
+        if r["status"] == "skipped":
+            out.append(
+                f"| {r['cell']} | — | — | — | — | skipped | — | — |"
+            )
+            continue
+        if r["status"] != "ok":
+            out.append(
+                f"| {r['cell']} | — | — | — | — | FAILED | — | — |"
+            )
+            continue
+        mem = r.get("memory_analysis", {})
+        out.append(
+            "| {cell} | {q} | {c} | {m} | {k} | {dom} | {u:.3f} | {f} |"
+            .format(
+                cell=r["cell"], q=r.get("quant_bits") or "bf16",
+                c=fmt_ms(r["compute_s"]), m=fmt_ms(r["memory_s"]),
+                k=fmt_ms(r["collective_s"]), dom=r["dominant"],
+                u=r.get("useful_flop_frac", 0.0),
+                f="yes" if mem.get("fits_16gb_hbm") else "NO",
+            )
+        )
+    return "\n".join(out)
+
+
+def summarize(rows: list[dict]) -> dict:
+    ok = [r for r in rows if r["status"] == "ok"]
+    sk = [r for r in rows if r["status"] == "skipped"]
+    bad = [r for r in rows if r["status"] not in ("ok", "skipped")]
+    by_bound = {}
+    for r in ok:
+        by_bound.setdefault(r["dominant"], []).append(r["cell"])
+    return {"ok": len(ok), "skipped": len(sk), "failed": len(bad),
+            "by_bound": {k: len(v) for k, v in by_bound.items()}}
+
+
+def main(path: str = "artifacts/dryrun_baseline.jsonl"):
+    rows = load(path)
+    print(render_table(rows, "16x16"))
+    print()
+    print("multi-pod (2x16x16):")
+    print(render_table(rows, "2x16x16"))
+    print()
+    print(summarize(rows))
+
+
+if __name__ == "__main__":
+    import sys
+
+    main(sys.argv[1] if len(sys.argv) > 1 else
+         "artifacts/dryrun_baseline.jsonl")

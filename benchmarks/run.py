@@ -1,0 +1,108 @@
+"""Benchmark entry point — one table per paper figure + roofline summary.
+
+Prints ``name,us_per_call,derived`` CSV rows:
+  * vggb/<layer>/<variant>      — paper Figs. 15/16 analogue (this host's
+                                  CPU): measured us, derived = speedup vs
+                                  native int8.
+  * a57-model/<variant>         — paper Figs. 17/18 analogue: modeled
+                                  ops/value, derived = modeled speedup
+                                  ('packed' variant reproduces the paper's
+                                  6x/10x claims; 'extract' is our general
+                                  TPU-port implementation).
+  * samd-matmul/<bits>          — packed-weight GEMM (the TPU serving
+                                  kernel's XLA path, CPU-measured): us,
+                                  derived = speedup vs bf16 matmul of the
+                                  same logical shape.
+  * roofline/<summary>          — dry-run cell counts by bound (if the
+                                  artifact exists).
+
+Full sweep: python -m benchmarks.run --full (slower; all 10 VGG layers,
+bit widths 8..2).
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def bench_samd_matmul(bits_list=(2, 4, 8)):
+    from repro.quant import QuantConfig, pack_weights
+    from repro.quant.packing import qmatmul
+
+    rows = []
+    m, k, n = 32, 2048, 2048
+    rng = np.random.default_rng(0)
+    w = jnp.asarray(rng.normal(size=(k, n)), jnp.float32).astype(jnp.bfloat16)
+    x = jnp.asarray(rng.normal(size=(m, k)), jnp.float32).astype(jnp.bfloat16)
+
+    f_ref = jax.jit(lambda x, w: x @ w)
+    jax.block_until_ready(f_ref(x, w))
+    ts = []
+    for _ in range(10):
+        t0 = time.perf_counter()
+        jax.block_until_ready(f_ref(x, w))
+        ts.append(time.perf_counter() - t0)
+    t_ref = float(np.median(ts)) * 1e6
+    rows.append(("samd-matmul/bf16", t_ref, 1.0))
+
+    for bits in bits_list:
+        cfg = QuantConfig(bits=bits)
+        packed, scale = pack_weights(w.astype(jnp.float32), cfg)
+        f = jax.jit(lambda x, p, s: qmatmul(x, p, s, k, cfg))
+        jax.block_until_ready(f(x, packed, scale))
+        ts = []
+        for _ in range(10):
+            t0 = time.perf_counter()
+            jax.block_until_ready(f(x, packed, scale))
+            ts.append(time.perf_counter() - t0)
+        t = float(np.median(ts)) * 1e6
+        rows.append((f"samd-matmul/b{bits}", t, t_ref / t))
+    return rows
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true")
+    ap.add_argument("--roofline-artifact",
+                    default="artifacts/dryrun_baseline.jsonl")
+    args = ap.parse_args()
+
+    from benchmarks import bench_vggb, roofline
+
+    print("name,us_per_call,derived")
+
+    if args.full:
+        layers, bits = None, (8, 6, 4, 3, 2)
+    else:
+        from repro.configs.vggb import VGGB_LAYERS
+
+        layers, bits = [VGGB_LAYERS[0], VGGB_LAYERS[4], VGGB_LAYERS[8]], \
+            (8, 4, 2)
+
+    for name, us, derived in bench_vggb.run(layers=layers, bit_list=bits,
+                                            quick=not args.full):
+        print(f"{name},{us:.1f},{derived:.3f}")
+
+    for name, per_val, speedup in bench_vggb.op_count_model(bits):
+        print(f"{name},{per_val:.2f},{speedup:.2f}")
+
+    for name, us, derived in bench_samd_matmul():
+        print(f"{name},{us:.1f},{derived:.3f}")
+
+    rows = roofline.load(args.roofline_artifact)
+    if rows:
+        s = roofline.summarize(rows)
+        print(f"roofline/cells_ok,{s['ok']},0")
+        print(f"roofline/cells_skipped,{s['skipped']},0")
+        print(f"roofline/cells_failed,{s['failed']},0")
+        for bound, cnt in s["by_bound"].items():
+            print(f"roofline/bound_{bound},{cnt},0")
+
+
+if __name__ == "__main__":
+    main()

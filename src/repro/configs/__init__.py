@@ -1,0 +1,8 @@
+from repro.configs.base import ArchConfig, RunConfig, ShapeConfig, SHAPES
+from repro.configs.archs import ARCHS, get_arch, smoke_config
+from repro.configs.vggb import VGGB_LAYERS
+
+__all__ = [
+    "ArchConfig", "RunConfig", "ShapeConfig", "SHAPES", "ARCHS",
+    "get_arch", "smoke_config", "VGGB_LAYERS",
+]

@@ -1,0 +1,21 @@
+"""The paper's own evaluation target: convolutional layers of VGG-B
+(Simonyan & Zisserman [17], Table 1 column B).
+
+Each entry: (name, in_channels, out_channels, H, W). Kernels are 3x3.
+The paper benchmarks each conv layer with the loop of Fig. 14 at weight/
+activation precisions 8 down to 2; our harness mirrors that sweep in
+``benchmarks/bench_vggb.py``.
+"""
+
+VGGB_LAYERS = [
+    ("conv1_1", 3, 64, 224, 224),
+    ("conv1_2", 64, 64, 224, 224),
+    ("conv2_1", 64, 128, 112, 112),
+    ("conv2_2", 128, 128, 112, 112),
+    ("conv3_1", 128, 256, 56, 56),
+    ("conv3_2", 256, 256, 56, 56),
+    ("conv4_1", 256, 512, 28, 28),
+    ("conv4_2", 512, 512, 28, 28),
+    ("conv5_1", 512, 512, 14, 14),
+    ("conv5_2", 512, 512, 14, 14),
+]

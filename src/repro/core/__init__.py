@@ -1,0 +1,46 @@
+"""Core SAMD library — the paper's contribution as composable JAX modules.
+
+Layers:
+  masks     — bitmask construction (Fig. 3)
+  samd      — formats, pack/unpack, lane-wise add/sub/mul, vector scale,
+              sign extension, signed-product fixup (Figs. 2, 5-9, 11-12)
+  conv      — convolution as long multiplication (§5-6)
+  overflow  — constant-kernel overflow analysis (§7, Fig. 13)
+  codegen   — op synthesizer (the paper's code generator, as jit closures)
+"""
+from repro.core.samd import (
+    SAMDFormat,
+    conv_format,
+    conv_lane_width,
+    dense_format,
+    pack,
+    perm_format,
+    samd_add,
+    samd_add_perm,
+    samd_mul,
+    samd_sub,
+    scale_format,
+    sign_extend_for_mul,
+    unpack,
+    vector_scale_perm,
+    vector_scale_temp,
+    correct_signed_product,
+)
+from repro.core.conv import (
+    ConvPlan,
+    conv_by_scale,
+    make_plan,
+    samd_conv_full,
+    samd_conv_multichannel,
+    samd_correlate_valid,
+)
+from repro.core.overflow import conv_output_bits, plan_for_kernel
+
+__all__ = [
+    "SAMDFormat", "conv_format", "conv_lane_width", "dense_format", "pack",
+    "perm_format", "samd_add", "samd_add_perm", "samd_mul", "samd_sub",
+    "scale_format", "sign_extend_for_mul", "unpack", "vector_scale_perm",
+    "vector_scale_temp", "correct_signed_product", "ConvPlan",
+    "conv_by_scale", "make_plan", "samd_conv_full", "samd_conv_multichannel",
+    "samd_correlate_valid", "conv_output_bits", "plan_for_kernel",
+]

@@ -1,0 +1,364 @@
+"""Convolution as long multiplication (paper §5–§6).
+
+The key identity: packing values at bit-stride L turns a machine word into
+the base-2^L evaluation of a polynomial. One full-width multiply of two such
+words computes the polynomial product — i.e. the *full convolution* of the
+two coefficient sequences — provided no coefficient of the product overflows
+its L-bit lane.
+
+For signed lanes, sign-extending each lane into its spacer bits
+(:func:`repro.core.samd.sign_extend_for_mul`) makes the packed word equal
+``sum_i s_i * 2**(i*L)`` as a plain integer, with genuinely negative
+coefficients. Two consequences, both handled here:
+
+  1. The unsigned widening multiply computes ``(X mod 2^W)*(K mod 2^W)``;
+     when X or K is negative as an integer the *high* half differs from
+     ``X*K mod 2^2W``. We apply the standard Grys-style adjustment
+     (paper §6 cites Grys [9]): ``hi -= sx*k_word + sk*x_word``.
+  2. Extracting lane t of the product reads ``c_t - borrow_t`` where
+     ``borrow_t`` is 1 iff the first nonzero lane below t is negative.
+     The paper's non-obvious fixup (Fig. 12) repairs this in two ops:
+     ``q = p + (p & msb); result = q ^ (p & msb)``.
+
+TPU adaptation: the paper's 64x64->128 scalar multiply does not exist on
+TPU; words are 32-bit VPU lanes and the widening multiply is synthesized
+from 16-bit limbs (:func:`repro.core.samd.mul_wide_u32`). A 64-bit word
+path (requires jax x64) is provided for CPU validation of the paper's exact
+configuration.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import masks
+from repro.core.samd import (
+    SAMDFormat,
+    conv_format,
+    dw_add,
+    mul_wide_u32,
+    pack,
+    sign_extend_for_mul,
+    word_dtype,
+)
+
+
+@dataclasses.dataclass(frozen=True)
+class ConvPlan:
+    """Static plan for a conv-via-multiplication op (what the paper's code
+    generator would emit for one (bits, taps, signedness) tuple)."""
+
+    fmt: SAMDFormat
+    taps: int
+
+    @property
+    def lanes_per_chunk(self) -> int:
+        return self.fmt.lanes_per_word
+
+    @property
+    def out_lanes_per_chunk(self) -> int:
+        return self.lanes_per_chunk + self.taps - 1
+
+    def validate(self):
+        if self.taps * self.fmt.lane_width > self.fmt.word_bits:
+            raise ValueError(
+                f"kernel ({self.taps} taps x {self.fmt.lane_width}b lanes) "
+                f"does not fit a {self.fmt.word_bits}-bit word; use "
+                f"conv_by_scale (vector-scale fallback) for wide formats"
+            )
+        if self.out_lanes_per_chunk * self.fmt.lane_width > 2 * self.fmt.word_bits:
+            raise ValueError("product lanes exceed double-width result")
+
+
+def make_plan(
+    bits: int,
+    taps: int,
+    signed: bool = True,
+    word_bits: int = 32,
+    paper_compat: bool = False,
+    lane_width: int | None = None,
+) -> ConvPlan:
+    fmt = conv_format(bits, taps, signed, word_bits, paper_compat, lane_width)
+    plan = ConvPlan(fmt, taps)
+    plan.validate()
+    return plan
+
+
+# ---------------------------------------------------------------------------
+# double-width lane machinery (static bit offsets -> plain shifts)
+# ---------------------------------------------------------------------------
+
+def _dw_extract_lane(hi: jax.Array, lo: jax.Array, offset: int, width: int,
+                     word_bits: int) -> jax.Array:
+    """Extract ``width`` bits at static ``offset`` from the (hi, lo) pair."""
+    mask = (1 << width) - 1
+    if offset + width <= word_bits:
+        out = (lo >> offset) if offset else lo
+    elif offset >= word_bits:
+        out = hi >> (offset - word_bits)
+    else:  # straddles the boundary
+        out = (lo >> offset) | (hi << (word_bits - offset))
+    return out & jnp.asarray(mask, lo.dtype)
+
+
+def _dw_msb_fixup(hi: jax.Array, lo: jax.Array, fmt: SAMDFormat):
+    """Signed-product borrow fixup (Fig. 12) across a (hi, lo) pair."""
+    wb = fmt.word_bits
+    msb_full = masks.build_mask(fmt.lane_width - 1, 1, fmt.lane_width, 2 * wb)
+    m_lo = msb_full & ((1 << wb) - 1)
+    m_hi = msb_full >> wb
+    s_lo = lo & jnp.asarray(m_lo, lo.dtype)
+    s_hi = hi & jnp.asarray(m_hi, hi.dtype)
+    q_hi, q_lo = dw_add((hi, lo), (s_hi, s_lo))
+    return q_hi ^ s_hi, q_lo ^ s_lo
+
+
+def _widening_mul(x_word: jax.Array, k_word: jax.Array, word_bits: int):
+    if word_bits == 32:
+        return mul_wide_u32(x_word, k_word)
+    # 64-bit CPU validation path: split via numpy-style limbs on uint64
+    a = x_word.astype(jnp.uint64)
+    b = k_word.astype(jnp.uint64)
+    m = jnp.uint64(0xFFFFFFFF)
+    a0, a1 = a & m, a >> jnp.uint64(32)
+    b0, b1 = b & m, b >> jnp.uint64(32)
+    p00 = a0 * b0
+    p01 = a0 * b1
+    p10 = a1 * b0
+    p11 = a1 * b1
+    mid = (p00 >> jnp.uint64(32)) + (p01 & m) + (p10 & m)
+    lo = (p00 & m) | (mid << jnp.uint64(32))
+    hi = p11 + (p01 >> jnp.uint64(32)) + (p10 >> jnp.uint64(32)) + (
+        mid >> jnp.uint64(32)
+    )
+    return hi, lo
+
+
+def _grys_adjust_hi(hi, x_word, k_word, fmt: SAMDFormat):
+    """hi -= sx*k + sk*x : signed-integer high-half correction for an
+    unsigned widening multiply (§6 / Grys [9])."""
+    wb = fmt.word_bits
+    shift = jnp.asarray(wb - 1, x_word.dtype)
+    sx = x_word >> shift  # 0 or 1
+    sk = k_word >> shift
+    hi = hi - jnp.where(sx.astype(bool), k_word, jnp.zeros_like(k_word))
+    hi = hi - jnp.where(sk.astype(bool), x_word, jnp.zeros_like(x_word))
+    return hi
+
+
+# ---------------------------------------------------------------------------
+# the op: full 1D convolution via scalar multiplication
+# ---------------------------------------------------------------------------
+
+def pack_conv_operand(values: jax.Array, plan: ConvPlan) -> jax.Array:
+    """Pack [..., n] integer values chunk-wise: one word per ``lanes`` values,
+    sign-extended into spacer bits when the plan is signed."""
+    fmt = plan.fmt
+    k = fmt.lanes_per_word
+    n = values.shape[-1]
+    nc = -(-n // k)
+    pad = nc * k - n
+    v = values
+    if pad:
+        v = jnp.pad(v, [(0, 0)] * (v.ndim - 1) + [(0, pad)])
+    v = v.reshape(v.shape[:-1] + (nc, k))
+    words = pack(v, fmt)[..., 0]  # one word per chunk
+    if fmt.signed:
+        words = sign_extend_for_mul(words, fmt)
+    return words  # [..., nc]
+
+
+def pack_conv_kernel(kernel: jax.Array, plan: ConvPlan) -> jax.Array:
+    """Pack [..., taps] kernel values into one word each."""
+    fmt = plan.fmt
+    words = pack(kernel, fmt)[..., 0]
+    if fmt.signed:
+        words = sign_extend_for_mul(words, fmt)
+    return words
+
+
+def chunk_products(x_words: jax.Array, k_word: jax.Array, plan: ConvPlan):
+    """Widening multiply of every input chunk word by the kernel word,
+    with the signed high-half adjustment when needed. Returns (hi, lo)."""
+    fmt = plan.fmt
+    hi, lo = _widening_mul(x_words, k_word, fmt.word_bits)
+    if fmt.signed:
+        hi = _grys_adjust_hi(hi, x_words, k_word, fmt)
+        hi, lo = _dw_msb_fixup(hi, lo, fmt)
+    return hi, lo
+
+
+def extract_outputs(hi: jax.Array, lo: jax.Array, plan: ConvPlan) -> jax.Array:
+    """Extract the ``lanes + taps - 1`` output lanes of each chunk product
+    as int32 [..., nc, out_lanes]."""
+    fmt = plan.fmt
+    L = fmt.lane_width
+    outs = []
+    for t in range(plan.out_lanes_per_chunk):
+        lane = _dw_extract_lane(hi, lo, t * L, L, fmt.word_bits)
+        v = lane.astype(jnp.int64 if fmt.word_bits == 64 else jnp.int32)
+        if fmt.signed:
+            sign = (v >> (L - 1)) & 1
+            v = v - (sign << L)
+        outs.append(v.astype(jnp.int32))
+    return jnp.stack(outs, axis=-1)
+
+
+def overlap_add(ext: jax.Array, plan: ConvPlan, n_out: int) -> jax.Array:
+    """Align the parallelogram partial-product regions of successive chunks
+    (§5.1): chunk c's lane t lands at global index c*lanes + t."""
+    lanes = plan.lanes_per_chunk
+    nc = ext.shape[-2]
+    total = nc * lanes + plan.taps - 1
+    out = jnp.zeros(ext.shape[:-2] + (total,), jnp.int32)
+    for t in range(plan.out_lanes_per_chunk):
+        sl = ext[..., :, t]
+        out = out.at[..., t : t + nc * lanes : lanes].add(sl)
+    return out[..., :n_out]
+
+
+def samd_conv_full(x: jax.Array, kernel: jax.Array, plan: ConvPlan) -> jax.Array:
+    """Full 1D convolution (== polynomial product, ``np.convolve(x, k)``)
+    of integer sequences, computed with one widening multiply per
+    ``lanes_per_chunk`` input values.
+
+    x: [..., n] int; kernel: [taps] int  ->  [..., n + taps - 1] int32.
+    """
+    n = x.shape[-1]
+    xw = pack_conv_operand(x, plan)
+    kw = pack_conv_kernel(kernel, plan)
+    hi, lo = chunk_products(xw, kw, plan)
+    ext = extract_outputs(hi, lo, plan)
+    return overlap_add(ext, plan, n + plan.taps - 1)
+
+
+def samd_correlate_valid(x: jax.Array, kernel: jax.Array, plan: ConvPlan) -> jax.Array:
+    """CNN-style 'valid' correlation: out[i] = sum_j k[j] * x[i+j]."""
+    full = samd_conv_full(x, kernel[..., ::-1], plan)
+    taps = plan.taps
+    return full[..., taps - 1 : x.shape[-1]]
+
+
+# ---------------------------------------------------------------------------
+# multichannel: accumulate packed products across channels BEFORE resolving
+# overlaps (paper §5, last paragraph) — one fixup/extraction per position.
+# ---------------------------------------------------------------------------
+
+def samd_conv_multichannel(
+    x: jax.Array, kernel: jax.Array, plan: ConvPlan
+) -> jax.Array:
+    """sum_c full_conv(x[c], kernel[c]).
+
+    x: [..., C, n]; kernel: [C, taps] -> [..., n + taps - 1] int32.
+
+    The plan's lane width must cover the cross-channel accumulation; use
+    :func:`repro.core.overflow.plan_for_kernel` to derive it from the §7
+    constant-kernel analysis.
+    """
+    fmt = plan.fmt
+    n = x.shape[-1]
+    xw = pack_conv_operand(x, plan)          # [..., C, nc]
+    kw = pack_conv_kernel(kernel, plan)      # [C]
+    hi, lo = _widening_mul(xw, kw[..., :, None], fmt.word_bits)
+    if fmt.signed:
+        hi = _grys_adjust_hi(hi, xw, kw[..., :, None], fmt)
+    # accumulate across channels in the packed domain (cheap dw adds);
+    # large channel counts use a scan so the jaxpr stays O(1) in C
+    n_ch = x.shape[-2]
+    if n_ch > 8:
+        hs = jnp.moveaxis(hi, -2, 0)
+        ls = jnp.moveaxis(lo, -2, 0)
+
+        def _acc(carry, hl):
+            return dw_add(carry, hl), None
+
+        (acc_hi, acc_lo), _ = jax.lax.scan(
+            _acc, (hs[0], ls[0]), (hs[1:], ls[1:])
+        )
+    else:
+        acc_hi, acc_lo = hi[..., 0, :], lo[..., 0, :]
+        for c in range(1, n_ch):
+            acc_hi, acc_lo = dw_add(
+                (acc_hi, acc_lo), (hi[..., c, :], lo[..., c, :])
+            )
+    if fmt.signed:
+        acc_hi, acc_lo = _dw_msb_fixup(acc_hi, acc_lo, fmt)
+    ext = extract_outputs(acc_hi, acc_lo, plan)
+    return overlap_add(ext, plan, n + plan.taps - 1)
+
+
+def samd_conv_grouped(x: jax.Array, kernel: jax.Array, bits: int,
+                      word_bits: int = 32) -> jax.Array:
+    """Multichannel conv-as-multiplication with *grouped* channel
+    accumulation.
+
+    The paper accumulates all channels in the packed domain under its
+    "<= 16-bit outputs in 64-bit words" constraint (§8). On 32-bit TPU
+    words the same idea caps the per-lane accumulation earlier, so channels
+    are split into groups sized by the worst-case §7 bound; each group is
+    accumulated packed (one widening multiply per chunk per channel, dw
+    adds across the group) and groups are combined after extraction.
+
+    x: [C, n], kernel: [C, taps] -> [n + taps - 1] int32.
+    """
+    c, n = x.shape
+    taps = kernel.shape[-1]
+    lane_max = word_bits // taps
+    cap = (1 << (lane_max - 1)) - 1
+    prod_max = taps * (1 << (bits - 1)) * (1 << (bits - 1))
+    g = max(1, cap // prod_max)           # channels per packed group
+    g = min(g, c)
+    plan = make_plan(bits, taps, signed=True, word_bits=word_bits,
+                     lane_width=lane_max)
+    ng = -(-c // g)
+    pad = ng * g - c
+    if pad:
+        x = jnp.pad(x, ((0, pad), (0, 0)))
+        kernel = jnp.pad(kernel, ((0, pad), (0, 0)))
+    xg = x.reshape(ng, g, n)
+    kg = kernel.reshape(ng, g, taps)
+    outs = jax.vmap(lambda xx, kk: samd_conv_multichannel(xx, kk, plan))(
+        xg, kg
+    )
+    return jnp.sum(outs, axis=0)
+
+
+# ---------------------------------------------------------------------------
+# vector-scale fallback for formats too wide for conv-via-multiply
+# ---------------------------------------------------------------------------
+
+def conv_by_scale(x: jax.Array, kernel: jax.Array, bits: int,
+                  signed: bool = True, word_bits: int = 32) -> jax.Array:
+    """Full 1D convolution via one vector-scale (§4) per kernel tap.
+
+    Works for any ``bits`` up to word_bits//2. Each tap multiplies the whole
+    packed input by one scalar (a single native multiply per word) and the
+    shifted partial results are accumulated in the value domain.
+    """
+    from repro.core.samd import (
+        scale_format,
+        unpack_lanes_wide,
+        vector_scale_perm,
+        correct_signed_product,
+    )
+
+    fmt = scale_format(bits, signed, word_bits)
+    n = x.shape[-1]
+    taps = kernel.shape[-1]
+    xw = pack(x, fmt)
+    if signed:
+        xw = sign_extend_for_mul(xw, fmt)
+    out = jnp.zeros(x.shape[:-1] + (n + taps - 1,), jnp.int32)
+    kmask = (1 << word_bits) - 1
+    for j in range(taps):
+        kj = kernel[..., j].astype(jnp.int64 if word_bits == 64 else jnp.int32)
+        kj_word = kj.astype(fmt.dtype) & jnp.asarray(kmask, fmt.dtype)
+        prod = vector_scale_perm(xw, kj_word, fmt)
+        if signed:
+            prod = correct_signed_product(prod, fmt)
+        vals = unpack_lanes_wide(prod, fmt, n)
+        out = out.at[..., j : j + n].add(vals)
+    return out

@@ -1,0 +1,401 @@
+"""SAMD vector formats and lane-wise arithmetic (paper §2–§4).
+
+A SAMD vector embeds ``k`` lanes of ``lane_width`` bits in each native
+integer word. Values occupy the low ``bits`` bits of a lane; the remaining
+``lane_width - bits`` bits are spacer bits (zero for unsigned, sign
+extension for signed formats that require it).
+
+Words are little-endian in lanes: lane 0 sits at the LSB of word 0.
+
+Two word widths are supported:
+  * 32-bit (``jnp.uint32``) — the TPU-native embedding (each VPU lane is a
+    32-bit SAMD word; "SAMD within SIMD").
+  * 64-bit (``jnp.uint64``) — the paper's CPU configuration, used by the
+    CPU validation/benchmark path. Requires ``jax.config.jax_enable_x64``.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Literal
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import masks
+
+SpacerRegime = Literal["temporary", "permanent"]
+
+
+def word_dtype(word_bits: int):
+    if word_bits == 32:
+        return jnp.uint32
+    if word_bits == 64:
+        if not jax.config.jax_enable_x64:
+            raise ValueError(
+                "64-bit SAMD words need jax_enable_x64 (CPU validation path)."
+            )
+        return jnp.uint64
+    raise ValueError(f"word_bits must be 32 or 64, got {word_bits}")
+
+
+@dataclasses.dataclass(frozen=True)
+class SAMDFormat:
+    """Describes how values are embedded in scalar words.
+
+    bits:        precision of each value (b in the paper).
+    lane_width:  total bits per lane, value + spacer. ``bits`` for the dense
+                 temporary-spacer format (Fig. 5), ``bits+1`` for one
+                 permanent spacer bit (Fig. 2), ``2*bits`` for the
+                 vector-scale format (Fig. 8), ``2*bits+2`` (3 taps) for the
+                 convolution format (§5.1).
+    signed:      two's-complement lanes if True.
+    word_bits:   32 or 64.
+    """
+
+    bits: int
+    lane_width: int
+    signed: bool = True
+    word_bits: int = 32
+
+    def __post_init__(self):
+        if self.bits < 1:
+            raise ValueError("bits must be >= 1")
+        if self.lane_width < self.bits:
+            raise ValueError("lane_width must be >= bits")
+        if self.lane_width > self.word_bits:
+            raise ValueError("lane must fit in a word")
+
+    @property
+    def lanes_per_word(self) -> int:
+        return self.word_bits // self.lane_width
+
+    @property
+    def dtype(self):
+        return word_dtype(self.word_bits)
+
+    # Handy masks (Python ints — become constants under jit).
+    @property
+    def msb_mask(self) -> int:
+        return masks.build_mask(
+            self.lane_width - 1, 1, self.lane_width, self.word_bits
+        )
+
+    @property
+    def value_msb_mask(self) -> int:
+        """MSB of the *value* portion (sign bit position) of each lane."""
+        return masks.build_mask(self.bits - 1, 1, self.lane_width, self.word_bits)
+
+    @property
+    def value_bits_mask(self) -> int:
+        return masks.value_mask(self.bits, self.lane_width, self.word_bits)
+
+    @property
+    def lane_bits_mask(self) -> int:
+        return masks.lane_mask(self.lane_width, self.word_bits)
+
+    def const(self, v: int):
+        return jnp.asarray(v & masks.full_mask(self.word_bits), self.dtype)
+
+
+def dense_format(bits: int, signed: bool = True, word_bits: int = 32) -> SAMDFormat:
+    """Temporary-spacer format: lanes are exactly ``bits`` wide (Fig. 5)."""
+    return SAMDFormat(bits, bits, signed, word_bits)
+
+
+def perm_format(bits: int, signed: bool = True, word_bits: int = 32) -> SAMDFormat:
+    """One permanent spacer bit in the MSB of each lane (Fig. 2 / §6.1)."""
+    return SAMDFormat(bits, bits + 1, signed, word_bits)
+
+
+def scale_format(bits: int, signed: bool = True, word_bits: int = 32) -> SAMDFormat:
+    """Vector-scale format: b value bits + b spacer bits per lane (Fig. 8)."""
+    return SAMDFormat(bits, 2 * bits, signed, word_bits)
+
+
+def conv_lane_width(
+    bits: int, taps: int, signed: bool, paper_compat: bool = False
+) -> int:
+    """Minimal output-lane width for conv-via-multiplication (§5.1).
+
+    ``paper_compat=True`` reproduces the paper's generic ``2b + 2`` sizing
+    for 3 taps. The default computes the *exact* capacity (a beyond-paper
+    micro-optimization): signed products are at most 4^(b-1), so signed
+    lanes can often be one bit narrower than the paper's bound. One extra
+    unit is reserved for the borrow that signed extraction induces (§6).
+    """
+    import math
+
+    if paper_compat:
+        return 2 * bits + max(1, math.ceil(math.log2(taps))) if taps > 1 else 2 * bits
+    if signed:
+        max_mag = taps * (1 << (bits - 1)) * (1 << (bits - 1)) + 1  # +1 borrow
+        lane = 1
+        while (1 << (lane - 1)) < max_mag:
+            lane += 1
+        return max(lane, bits + 1)
+    max_val = taps * ((1 << bits) - 1) ** 2
+    lane = 1
+    while (1 << lane) - 1 < max_val:
+        lane += 1
+    return max(lane, bits)
+
+
+def conv_format(
+    bits: int,
+    taps: int = 3,
+    signed: bool = True,
+    word_bits: int = 32,
+    paper_compat: bool = False,
+    lane_width: int | None = None,
+) -> SAMDFormat:
+    """Convolution format (§5.1): lanes wide enough that ``taps`` products of
+    b-bit values (plus the signed-extraction borrow) never overflow."""
+    lane = lane_width or conv_lane_width(bits, taps, signed, paper_compat)
+    return SAMDFormat(bits, lane, signed, word_bits)
+
+
+# ---------------------------------------------------------------------------
+# pack / unpack
+# ---------------------------------------------------------------------------
+
+def num_words(n_values: int, fmt: SAMDFormat) -> int:
+    k = fmt.lanes_per_word
+    return -(-n_values // k)
+
+
+def pack(values: jax.Array, fmt: SAMDFormat) -> jax.Array:
+    """Pack integer ``values`` [..., n] into SAMD words [..., n_words].
+
+    Values are truncated to ``fmt.bits`` bits (two's complement when signed);
+    spacer bits are zero.
+    """
+    n = values.shape[-1]
+    k = fmt.lanes_per_word
+    nw = num_words(n, fmt)
+    pad = nw * k - n
+    v = values.astype(jnp.int32)
+    if pad:
+        v = jnp.pad(v, [(0, 0)] * (v.ndim - 1) + [(0, pad)])
+    v = v.reshape(v.shape[:-1] + (nw, k))
+    v = v.astype(fmt.dtype) & fmt.const((1 << fmt.bits) - 1)
+    shifts = (jnp.arange(k, dtype=fmt.dtype) * fmt.lane_width).astype(fmt.dtype)
+    words = jnp.bitwise_or.reduce(v << shifts, axis=-1)
+    return words.astype(fmt.dtype)
+
+
+def unpack(words: jax.Array, fmt: SAMDFormat, n: int) -> jax.Array:
+    """Unpack SAMD words back to int32 values [..., n].
+
+    Reads the low ``fmt.bits`` of each lane; sign-extends when signed.
+    """
+    k = fmt.lanes_per_word
+    shifts = (jnp.arange(k, dtype=fmt.dtype) * fmt.lane_width).astype(fmt.dtype)
+    lanes = (words[..., None] >> shifts) & fmt.const((1 << fmt.bits) - 1)
+    lanes = lanes.reshape(lanes.shape[:-2] + (-1,))[..., :n]
+    out = lanes.astype(jnp.int32)
+    if fmt.signed:
+        sign = (out >> (fmt.bits - 1)) & 1
+        out = out - (sign << fmt.bits)
+    return out
+
+
+def unpack_lanes_wide(words: jax.Array, fmt: SAMDFormat, n: int) -> jax.Array:
+    """Unpack reading the *entire* lane (value + spacer bits) as the value.
+
+    Used to read double-width products out of vector-scale / conv results.
+    Sign-extends over ``fmt.lane_width`` bits when signed.
+    """
+    k = fmt.lanes_per_word
+    shifts = (jnp.arange(k, dtype=fmt.dtype) * fmt.lane_width).astype(fmt.dtype)
+    lanes = (words[..., None] >> shifts) & fmt.const(
+        (1 << fmt.lane_width) - 1
+    )
+    lanes = lanes.reshape(lanes.shape[:-2] + (-1,))[..., :n]
+    out = lanes.astype(jnp.int64 if fmt.word_bits == 64 else jnp.int32)
+    if fmt.signed:
+        sign = (out >> (fmt.lane_width - 1)) & 1
+        out = out - (sign << fmt.lane_width)
+    return out.astype(jnp.int32)
+
+
+# ---------------------------------------------------------------------------
+# Lane-wise arithmetic (paper Figs. 2, 5, 6, 7)
+# ---------------------------------------------------------------------------
+
+def samd_add(a: jax.Array, b: jax.Array, fmt: SAMDFormat) -> jax.Array:
+    """Lane-wise add with *temporary* spacer bits (Fig. 5).
+
+    Correct for signed and unsigned lanes of any width; the MSB of each lane
+    is recomputed with XOR after a masked add.
+    """
+    mask = fmt.const(fmt.msb_mask)
+    inv = fmt.const(~fmt.msb_mask)
+    msb = (a ^ b) & mask
+    total = (a & inv) + (b & inv)
+    return msb ^ total
+
+
+def samd_sub(a: jax.Array, b: jax.Array, fmt: SAMDFormat) -> jax.Array:
+    """Lane-wise subtract with temporary spacer bits (Fig. 6)."""
+    mask = fmt.const(fmt.msb_mask)
+    inv = fmt.const(~fmt.msb_mask)
+    msb = (a ^ b) & mask
+    diff = (a | mask) - (b & inv)
+    return msb ^ diff ^ mask
+
+
+def samd_add_perm(a: jax.Array, b: jax.Array, fmt: SAMDFormat) -> jax.Array:
+    """Lane-wise add with a *permanent* spacer bit in the lane MSB (Fig. 2).
+
+    Far cheaper than :func:`samd_add`: clear the spacer bits and let the
+    native adder run; overflow lands in the spacers. The result's spacer
+    bits are garbage and are cleared by the next consumer, exactly as in the
+    paper's low-complexity regime (§6.1).
+    """
+    inv = fmt.const(~fmt.msb_mask)
+    return (a & inv) + (b & inv)
+
+
+def samd_mul(a: jax.Array, b: jax.Array, fmt: SAMDFormat) -> jax.Array:
+    """Lane-wise multiply, O(bits) shift-and-add (paper Fig. 7, repaired).
+
+    Produces the low ``fmt.bits`` of each lane-wise product (mod 2^bits),
+    which is correct for both signed and unsigned lanes. The paper's
+    constant-time write-mask construction ``(bit << bits) - bit`` is used,
+    with one repair: as written in Fig. 7 the write mask spans
+    ``[lane*L + i, lane*L + i + bits)`` which *crosses into the next lane*
+    for i > 0, corrupting it. We intersect with the per-iteration constant
+    ``build_mask(i, bits - i, L)`` so the partial product is truncated at
+    the lane's value boundary — still O(1) extra ops per iteration.
+    """
+    bits = fmt.bits
+    lw = fmt.lane_width
+    total = jnp.zeros_like(a)
+    av = a & fmt.const(fmt.value_bits_mask)
+    for i in range(bits):
+        read_mask = fmt.const(masks.build_mask(i, 1, lw, fmt.word_bits))
+        bit = b & read_mask
+        write_mask = (bit << bits) - bit
+        write_mask = write_mask & fmt.const(
+            masks.build_mask(i, bits - i, lw, fmt.word_bits)
+        )
+        to_add = (av << i if i else av) & write_mask
+        total = samd_add(total, to_add, fmt)
+    return total
+
+
+# ---------------------------------------------------------------------------
+# Sign extension for multiplication (paper Fig. 11)
+# ---------------------------------------------------------------------------
+
+def sign_extend_for_mul(vec: jax.Array, fmt: SAMDFormat) -> jax.Array:
+    """Sign-extend each lane's value into its spacer bits (Fig. 11).
+
+    After this, the word *as a plain integer* equals
+    ``sum_i signed_value_i * 2**(i * lane_width)`` — the base-2^lane_width
+    polynomial with signed coefficients, which is what makes vector-scale
+    and convolution-by-multiplication work for signed lanes.
+    """
+    sign = vec & fmt.const(fmt.value_msb_mask)
+    return vec - (sign << 1)
+
+
+# ---------------------------------------------------------------------------
+# Vector scale (paper §4)
+# ---------------------------------------------------------------------------
+
+def vector_scale_perm(vec: jax.Array, scalar: jax.Array, fmt: SAMDFormat) -> jax.Array:
+    """Multiply every lane by one scalar using a single native multiply
+    (Fig. 8). ``fmt`` must be a scale/conv format (>= b spacer bits).
+
+    For signed operation, sign-extend inputs first (Fig. 11), pass the
+    scalar as a *full-width* two's-complement word (a 1-tap kernel word,
+    §6), and fix up with :func:`correct_signed_product`. Each result lane
+    holds the full double-width product in its ``lane_width`` bits.
+    """
+    return (vec * scalar).astype(fmt.dtype)
+
+
+def vector_scale_temp(
+    vec: jax.Array, scalar: jax.Array, fmt: SAMDFormat
+) -> jax.Array:
+    """Vector scale with temporary spacer bits (Fig. 9).
+
+    ``fmt`` is the dense format (lane_width == bits). Splits odd/even lanes
+    to create b temporary spacer bits, multiplies, masks the upper halves,
+    and merges. Low-b-bits of a product are sign-agnostic, so this is
+    correct for signed lanes with no fixup (§4.1). ``scalar`` must be the
+    *b-bit pattern* (value mod 2^bits), NOT sign-extended to full width —
+    otherwise the per-lane products overlap.
+    """
+    b = fmt.bits
+    even = fmt.const(masks.even_lane_mask(b, fmt.word_bits))
+    odd = fmt.const(masks.odd_lane_mask(b, fmt.word_bits))
+    lo_of_pair = fmt.const(masks.value_mask(b, 2 * b, fmt.word_bits))
+    ev = (vec & even) * scalar
+    od = ((vec & odd) >> b) * scalar
+    ev = ev & lo_of_pair
+    od = od & lo_of_pair
+    return ev | (od << b)
+
+
+def correct_signed_product(prod: jax.Array, fmt: SAMDFormat) -> jax.Array:
+    """Underflow correction after a signed SAMD multiply (paper Fig. 12).
+
+    A negative lane borrows 1 from the lane above it in the raw integer
+    product. Adding each lane's sign bit back *in place* propagates exactly
+    the right +1 chain; the final XOR restores the true MSB (§6):
+
+        q = p + (p & msb);  result = q ^ (p & msb)
+    """
+    msb = prod & fmt.const(fmt.msb_mask)
+    return (prod + msb) ^ msb
+
+
+def correct_signed_product_perm(prod: jax.Array, fmt: SAMDFormat) -> jax.Array:
+    """§6.1 low-complexity variant: when the lane MSB is a permanent spacer
+    bit we skip the final XOR (the MSB is not maintained)."""
+    msb = prod & fmt.const(fmt.msb_mask)
+    return prod + msb
+
+
+# ---------------------------------------------------------------------------
+# Double-word helpers (TPU adaptation: 32x32 -> 64-bit products built from
+# uint32 limbs; XLA on TPU has no native widening multiply).
+# ---------------------------------------------------------------------------
+
+def mul_wide_u32(a: jax.Array, b: jax.Array):
+    """Full 32x32 -> 64-bit product as (hi, lo) uint32 pairs."""
+    a = a.astype(jnp.uint32)
+    b = b.astype(jnp.uint32)
+    mask16 = jnp.uint32(0xFFFF)
+    a0, a1 = a & mask16, a >> 16
+    b0, b1 = b & mask16, b >> 16
+    p00 = a0 * b0
+    p01 = a0 * b1
+    p10 = a1 * b0
+    p11 = a1 * b1
+    mid = (p00 >> 16) + (p01 & mask16) + (p10 & mask16)
+    lo = (p00 & mask16) | (mid << 16)
+    hi = p11 + (p01 >> 16) + (p10 >> 16) + (mid >> 16)
+    return hi, lo
+
+
+def dw_add(a, b):
+    """(hi, lo) + (hi, lo) with carry between the 32-bit halves."""
+    (ah, al), (bh, bl) = a, b
+    lo = al + bl
+    carry = (lo < al).astype(jnp.uint32)
+    hi = ah + bh + carry
+    return hi, lo
+
+
+def dw_bitand(a, m_hi: int, m_lo: int):
+    ah, al = a
+    return ah & jnp.uint32(m_hi), al & jnp.uint32(m_lo)
+
+
+def dw_bitxor(a, b):
+    (ah, al), (bh, bl) = a, b
+    return ah ^ bh, al ^ bl

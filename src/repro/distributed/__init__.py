@@ -1,0 +1,9 @@
+"""Distribution: sharding rules, collectives, compression, fault tolerance."""
+from repro.distributed.sharding import (
+    param_pspecs,
+    batch_pspec,
+    cache_pspecs,
+    logical_to_mesh,
+)
+
+__all__ = ["param_pspecs", "batch_pspec", "cache_pspecs", "logical_to_mesh"]

@@ -1,0 +1,261 @@
+"""Logical-axis -> mesh-axis sharding rules.
+
+Every parameter's logical axes are declared in its TensorSpec; this module
+resolves them against a concrete mesh with divisibility checking — an axis
+that does not divide evenly falls back to replication (recorded, so the
+roofline report can call out e.g. 40 attention heads on a 16-way model
+axis; see DESIGN.md §6 and the hillclimb log).
+
+Rules (baseline):
+  vocab / ff / heads / kv_heads / experts / ssm_inner / rwkv_att -> 'model'
+  embed -> ('data', 'pod')   (FSDP/ZeRO-style: the second weight dim is
+           sharded over the data axes, so params+optimizer are fully
+           sharded 256/512-way; XLA all-gathers weight shards per layer —
+           the expected FSDP collective pattern)
+  batch -> ('pod', 'data') when divisible, else ('data',), else replicated
+  long-context KV cache: sequence -> 'data' when batch is unshardable
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ArchConfig, ShapeConfig
+from repro.models.layers import QuantizedTensor
+from repro.models.spec import TensorSpec
+
+_MODEL_AXES = {
+    "vocab", "ff", "heads", "kv_heads", "experts", "ssm_inner", "rwkv_att",
+}
+
+
+def _axis_size(mesh: Mesh, name: str) -> int:
+    return mesh.shape[name] if name in mesh.shape else 1
+
+
+def _data_axes_for(dim: int, mesh: Mesh) -> tuple | None:
+    """FSDP axes for an 'embed' dim: ('data','pod') when both divide."""
+    axes = []
+    div = 1
+    for name in ("data", "pod"):
+        sz = _axis_size(mesh, name)
+        if sz > 1 and dim % (div * sz) == 0:
+            axes.append(name)
+            div *= sz
+    return tuple(axes) if axes else None
+
+
+def logical_to_mesh(axes, shape, mesh: Mesh, mode: str = "train") -> P:
+    """Resolve logical axis names to a PartitionSpec.
+
+    At most one dim takes 'model'; at most one dim takes the data/pod axes.
+    Indivisible axes fall back to replication.
+
+    mode='train': 'embed' is FSDP-sharded over (data, pod) — params + opt
+    state are fully sharded; XLA re-gathers weights per layer (amortized by
+    the training step's compute).
+    mode='serve': 'embed' stays replicated — weight shards are 1D ('model')
+    and no per-step weight all-gather exists. Inference then reads each
+    weight byte exactly once per step, which is the regime the paper's SAMD
+    packing accelerates (packed bytes = bf16 bytes / packing factor).
+    """
+    out = []
+    model_used = False
+    data_used = False
+    for dim, name in zip(shape, axes):
+        if (
+            name in _MODEL_AXES
+            and not model_used
+            and dim % _axis_size(mesh, "model") == 0
+        ):
+            out.append("model")
+            model_used = True
+        elif name == "embed" and not data_used and mode == "train":
+            ax = _data_axes_for(dim, mesh)
+            out.append(ax)
+            data_used = ax is not None
+        else:
+            out.append(None)
+    return P(*out)
+
+
+def _pspec_for_spec(spec: TensorSpec, mesh: Mesh, mode: str = "train") -> P:
+    return logical_to_mesh(spec.axes, spec.shape, mesh, mode)
+
+
+def _pspec_for_quantized(spec: TensorSpec, mesh: Mesh, qcfg,
+                         mode: str = "train") -> tuple:
+    """Packed weights are 2D [K/vpw, prod(rest)]: shard the packed reduction
+    dim on the data axes (FSDP, train mode only) when it divides, and the
+    flattened rest on 'model' iff any rest axis was model-sharded and sizes
+    divide."""
+    axis = spec.quant_axis
+    k = spec.shape[axis]
+    kw = -(-k // qcfg.values_per_word)
+    rest_axes = [a for i, a in enumerate(spec.axes) if i != axis]
+    rest = int(np.prod([s for i, s in enumerate(spec.shape) if i != axis]))
+    model = _axis_size(mesh, "model")
+    shard_rest = (
+        any(a in _MODEL_AXES for a in rest_axes) and rest % model == 0
+    )
+    d_ax = _data_axes_for(kw, mesh) if mode == "train" else None
+    wspec = P(d_ax, "model" if shard_rest else None)
+    sspec = P(None, "model" if shard_rest else None)
+    return wspec, sspec
+
+
+def param_pspecs(template, mesh: Mesh, qcfg=None, mode: str = "train"):
+    """PartitionSpec tree matching the params (quantized when ``qcfg`` is an
+    enabled QuantConfig — the QuantizedTensor aux data must match the real
+    parameter tree exactly for jit in_shardings, hence qcfg is threaded
+    through). ``mode``: 'train' = FSDP embed sharding, 'serve' = 1D model
+    sharding with embed replicated (see logical_to_mesh)."""
+
+    def visit(spec):
+        if not isinstance(spec, TensorSpec):
+            return spec
+        return _pspec_for_spec(spec, mesh, mode)
+
+    if qcfg is None or not qcfg.enabled:
+        return jax.tree.map(
+            visit, template, is_leaf=lambda x: isinstance(x, TensorSpec)
+        )
+
+    from repro.models.quantize import _MIN_QUANT_SIZE
+
+    def visit2(spec):
+        if not isinstance(spec, TensorSpec):
+            return spec
+        if (
+            spec.quant_axis is None
+            or int(np.prod(spec.shape)) < _MIN_QUANT_SIZE
+            or ("vocab" in (spec.axes or ()) and not qcfg.quantize_embeddings)
+        ):
+            return _pspec_for_spec(spec, mesh, mode)
+        wspec, sspec = _pspec_for_quantized(spec, mesh, qcfg, mode)
+        return QuantizedTensor(wspec, sspec, tuple(spec.shape),
+                               spec.quant_axis, qcfg)
+
+    return jax.tree.map(
+        visit2, template, is_leaf=lambda x: isinstance(x, TensorSpec)
+    )
+
+
+def batch_pspec(batch: int, mesh: Mesh) -> tuple:
+    """Mesh axes for the global batch dimension (greedy, pod first)."""
+    axes = []
+    div = 1
+    for name in ("pod", "data"):
+        sz = _axis_size(mesh, name)
+        if sz > 1 and batch % (div * sz) == 0:
+            axes.append(name)
+            div *= sz
+    return tuple(axes)
+
+
+def data_pspec(batch: int, mesh: Mesh) -> P:
+    axes = batch_pspec(batch, mesh)
+    return P(axes if axes else None, None)
+
+
+def cache_pspecs(cfg: ArchConfig, shape: ShapeConfig, mesh: Mesh,
+                 stacked: bool = False, kv_bits=None):
+    """PartitionSpec tree matching init_cache(cfg, batch, max_len).
+
+    Decode KV caches are the dominant HBM consumer, so every available mesh
+    axis is spent on them: batch over the data axes; KV heads over 'model'
+    when divisible, otherwise the *sequence* axis goes on 'model'
+    (flash-decoding style: each model chip owns a key-range, attention
+    psums the partial scores). Batch-1 long-context additionally shards
+    sequence over 'data'.
+    """
+    b = shape.global_batch
+    baxes = batch_pspec(b, mesh) or None
+    model = _axis_size(mesh, "model")
+    data = _axis_size(mesh, "data")
+    kv_div = bool(cfg.n_kv_heads) and cfg.n_kv_heads % model == 0
+    seq_axes = []
+    if (baxes is None or "data" not in baxes) and shape.seq_len % data == 0:
+        seq_axes.append("data")  # batch can't use data -> sequence does
+    if not kv_div and shape.seq_len % model == 0:
+        seq_axes.append("model")  # flash-decoding key-range sharding
+    kv_ax = "model" if kv_div else None
+    seq_ax = tuple(seq_axes) if seq_axes else None
+
+    def kv():
+        out = {
+            "k": P(baxes, seq_ax, kv_ax, None),
+            "v": P(baxes, seq_ax, kv_ax, None),
+            "pos": P(baxes, seq_ax),
+        }
+        if kv_bits == 8:
+            out["k_scale"] = P(baxes, seq_ax, kv_ax)
+            out["v_scale"] = P(baxes, seq_ax, kv_ax)
+        return out
+
+    if stacked:  # leading layer dim from the scan-over-layers prefill
+        if cfg.family in ("dense", "moe"):
+            one = kv()
+        elif cfg.family == "rwkv6":
+            from repro.models.ssm import rwkv6_dims
+
+            h, _ = rwkv6_dims(cfg)
+            h_ax = "model" if h % model == 0 else None
+            d_ax = "model" if cfg.d_model % model == 0 else None
+            one = {
+                "wkv": P(baxes, h_ax, None, None),
+                "shift_tm": P(baxes, d_ax),
+                "shift_cm": P(baxes, d_ax),
+            }
+        else:
+            raise ValueError(cfg.family)
+        return {
+            "layers_stacked": jax.tree.map(
+                lambda p: P(None, *p), one,
+                is_leaf=lambda x: isinstance(x, P),
+            )
+        }
+
+    layers = []
+    if cfg.family in ("dense", "moe"):
+        layers = [kv() for _ in range(cfg.n_layers)]
+    elif cfg.family == "rwkv6":
+        from repro.models.ssm import rwkv6_dims
+
+        h, _ = rwkv6_dims(cfg)
+        h_ax = "model" if h % model == 0 else None
+        layers = [
+            {
+                "wkv": P(baxes, h_ax, None, None),
+                "shift_tm": P(baxes, "model" if cfg.d_model % model == 0 else None),
+                "shift_cm": P(baxes, "model" if cfg.d_model % model == 0 else None),
+            }
+            for _ in range(cfg.n_layers)
+        ]
+    elif cfg.family == "hybrid_mamba2":
+        from repro.models.ssm import mamba2_dims
+
+        d_inner, n_heads, conv_dim = mamba2_dims(cfg)
+        h_ax = "model" if n_heads % model == 0 else None
+        c_ax = "model" if conv_dim % model == 0 else None
+        for i in range(cfg.n_layers):
+            st = {
+                "conv": P(baxes, c_ax, None),
+                "ssd": P(baxes, h_ax, None, None),
+            }
+            if cfg.attn_every and (i + 1) % cfg.attn_every == 0:
+                st["attn_kv"] = kv()
+            layers.append(st)
+    return {"layers": layers}
+
+
+def named(tree, mesh: Mesh):
+    """PartitionSpec tree -> NamedSharding tree."""
+    return jax.tree.map(
+        lambda p: NamedSharding(mesh, p),
+        tree,
+        is_leaf=lambda x: isinstance(x, P),
+    )

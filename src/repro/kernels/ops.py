@@ -1,0 +1,52 @@
+"""Public jit'd wrappers for the Pallas kernels.
+
+``interpret`` defaults to True on CPU backends (this container) so the same
+call sites run the kernel bodies in Python for validation, and compile to
+Mosaic on a real TPU.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.conv import ConvPlan, overlap_add, pack_conv_kernel, pack_conv_operand
+from repro.quant.config import QuantConfig
+from repro.kernels import samd_conv as _conv
+from repro.kernels import samd_matmul as _mm
+
+
+def _default_interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+def samd_matmul(x: jax.Array, packed: jax.Array, scale: jax.Array, k: int,
+                cfg: QuantConfig, *, block_m: int = 128, block_n: int = 128,
+                block_kw: int = 64, interpret: bool | None = None) -> jax.Array:
+    """Packed-weight matmul: x[..., K] @ dequant(packed)[K, N]."""
+    if interpret is None:
+        interpret = _default_interpret()
+    lead = x.shape[:-1]
+    x2 = x.reshape(-1, x.shape[-1])
+    out = _mm.samd_matmul(
+        x2, packed, scale, k, cfg,
+        block_m=block_m, block_n=block_n, block_kw=block_kw,
+        interpret=interpret,
+    )
+    return out.reshape(lead + (out.shape[-1],))
+
+
+def samd_conv1d(x: jax.Array, kernel: jax.Array, plan: ConvPlan,
+                *, interpret: bool | None = None) -> jax.Array:
+    """Full 1D integer convolution via the Pallas conv-as-multiply kernel.
+
+    x: [n] int, kernel: [taps] int -> [n + taps - 1] int32.
+    """
+    if interpret is None:
+        interpret = _default_interpret()
+    n = x.shape[-1]
+    xw = pack_conv_operand(x, plan)
+    kw = pack_conv_kernel(kernel, plan)
+    ext = _conv.samd_conv_chunks(xw, kw, plan, interpret=interpret)
+    return overlap_add(ext, plan, n + plan.taps - 1)

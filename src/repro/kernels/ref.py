@@ -1,0 +1,36 @@
+"""Pure-jnp oracles for every Pallas kernel (the allclose targets)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.conv import ConvPlan
+from repro.quant.config import QuantConfig
+from repro.quant.packing import dequant_weights
+
+
+def samd_matmul_ref(x: jax.Array, packed: jax.Array, scale: jax.Array,
+                    k: int, cfg: QuantConfig) -> jax.Array:
+    """Unpack the whole weight and matmul at once."""
+    w = dequant_weights(packed, scale, k, cfg, dtype=x.dtype)
+    return jnp.matmul(x, w)
+
+
+def samd_conv_chunks_ref(x_words: jax.Array, k_word: jax.Array,
+                         plan: ConvPlan) -> jax.Array:
+    """Chunk products via the core library (already numpy-validated)."""
+    from repro.core.conv import chunk_products, extract_outputs
+
+    hi, lo = chunk_products(x_words, k_word, plan)
+    return extract_outputs(hi, lo, plan)
+
+
+def conv1d_int_ref(x: jax.Array, kernel: jax.Array) -> jax.Array:
+    """Integer full convolution, direct dot products."""
+    taps = kernel.shape[-1]
+    n = x.shape[-1]
+    xp = jnp.pad(x, [(0, 0)] * (x.ndim - 1) + [(taps - 1, taps - 1)])
+    out = jnp.zeros(x.shape[:-1] + (n + taps - 1,), jnp.int32)
+    for j in range(taps):
+        out = out + kernel[..., j] * xp[..., taps - 1 - j + jnp.arange(n + taps - 1)]
+    return out

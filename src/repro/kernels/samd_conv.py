@@ -1,0 +1,111 @@
+"""Pallas TPU kernel: convolution-as-long-multiplication on the VPU (§5-6).
+
+The faithful port of the paper's novel op. Input values are packed at
+lane-stride L into uint32 chunk words; each chunk word is multiplied by the
+kernel word with a synthesized 32x32->64 widening multiply (16-bit limbs —
+the TPU has no scalar wide multiplier, see DESIGN.md), Grys-adjusted for
+signed operands, borrow-fixed (Fig. 12), and its output lanes extracted.
+
+Each VPU op processes an (8, 128) vreg of chunk words = 1024 chunks x
+``lanes_per_chunk`` values — "SAMD within SIMD".
+
+The kernel emits per-chunk extracted lanes [nc, out_lanes]; the final
+overlap-add of the parallelogram regions (taps-1 strided adds) runs as XLA
+ops in ops.py — it is O(taps) adds per output and does not touch the wide
+multiply hot path.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.core.conv import ConvPlan
+from repro.core import masks as masks_mod
+
+
+def _wide_mul_u32(a, b):
+    mask16 = jnp.uint32(0xFFFF)
+    a0, a1 = a & mask16, a >> 16
+    b0, b1 = b & mask16, b >> 16
+    p00 = a0 * b0
+    p01 = a0 * b1
+    p10 = a1 * b0
+    p11 = a1 * b1
+    mid = (p00 >> 16) + (p01 & mask16) + (p10 & mask16)
+    lo = (p00 & mask16) | (mid << 16)
+    hi = p11 + (p01 >> 16) + (p10 >> 16) + (mid >> 16)
+    return hi, lo
+
+
+def _conv_kernel(x_ref, k_ref, o_ref, *, plan: ConvPlan):
+    fmt = plan.fmt
+    L = fmt.lane_width
+    xw = x_ref[...]            # [block, 1] uint32 chunk words
+    kw = k_ref[0, 0]           # scalar kernel word
+    hi, lo = _wide_mul_u32(xw, kw)
+    if fmt.signed:
+        # Grys high-half adjustment for signed operands
+        sx = (xw >> 31).astype(bool)
+        sk = (kw >> 31).astype(bool)
+        hi = hi - jnp.where(sx, kw, jnp.uint32(0))
+        hi = hi - jnp.where(sk, xw, jnp.uint32(0))
+        # Fig. 12 borrow fixup across the 64-bit pair
+        msb_full = masks_mod.build_mask(L - 1, 1, L, 64)
+        m_lo = jnp.uint32(msb_full & 0xFFFFFFFF)
+        m_hi = jnp.uint32(msb_full >> 32)
+        s_lo = lo & m_lo
+        s_hi = hi & m_hi
+        q_lo = lo + s_lo
+        carry = (q_lo < lo).astype(jnp.uint32)
+        q_hi = hi + s_hi + carry
+        hi, lo = q_hi ^ s_hi, q_lo ^ s_lo
+    # extract output lanes at static offsets
+    lane_mask = jnp.uint32((1 << L) - 1)
+    outs = []
+    for t in range(plan.out_lanes_per_chunk):
+        off = t * L
+        if off + L <= 32:
+            v = (lo >> off) if off else lo
+        elif off >= 32:
+            v = hi >> (off - 32)
+        else:
+            v = (lo >> off) | (hi << (32 - off))
+        v = (v & lane_mask).astype(jnp.int32)
+        if fmt.signed:
+            sign = (v >> (L - 1)) & 1
+            v = v - (sign << L)
+        outs.append(v[:, 0])
+    o_ref[...] = jnp.stack(outs, axis=-1)
+
+
+@functools.partial(jax.jit, static_argnames=("plan", "block", "interpret"))
+def samd_conv_chunks(
+    x_words: jax.Array,
+    k_word: jax.Array,
+    plan: ConvPlan,
+    *,
+    block: int = 1024,
+    interpret: bool = False,
+) -> jax.Array:
+    """[nc] packed chunk words x kernel word -> [nc, out_lanes] int32."""
+    nc = x_words.shape[0]
+    blk = min(block, nc)
+    grid = (pl.cdiv(nc, blk),)
+    return pl.pallas_call(
+        functools.partial(_conv_kernel, plan=plan),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((blk, 1), lambda i: (i, 0)),
+            pl.BlockSpec((1, 1), lambda i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec(
+            (blk, plan.out_lanes_per_chunk), lambda i: (i, 0)
+        ),
+        out_shape=jax.ShapeDtypeStruct(
+            (nc, plan.out_lanes_per_chunk), jnp.int32
+        ),
+        interpret=interpret,
+    )(x_words[:, None], k_word.reshape(1, 1))

@@ -1,0 +1,114 @@
+"""Pallas TPU kernel: packed-weight matmul (SAMD storage -> MXU compute).
+
+The production form of the paper's technique on TPU: weights are stored in
+HBM as SAMD-packed uint32 words (b-bit lanes along the reduction axis).
+Each grid step copies a *packed* block HBM->VMEM (32/lane_width x fewer
+bytes than bf16), unpacks + dequantizes on the VPU inside VMEM, and feeds
+the MXU. The HBM side therefore sees only packed bytes — the memory-roofline
+term drops by the packing factor, which is exactly the paper's claim
+("quantization reduces memory traffic") mapped onto the TPU hierarchy.
+
+Block shapes are chosen MXU-aligned: the unpacked K-block
+(block_kw * values_per_word) and N-block are multiples of 128 for the
+shapes used by the framework; ``block_m`` adapts to small decode batches.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.quant.config import QuantConfig
+
+
+def _unpack_dequant(words, scale, bits: int, lane_width: int, vpw: int,
+                    out_dtype):
+    """uint32 [bk, bn] -> dequantized [bk * vpw, bn] in VMEM (VPU ops)."""
+    bk, bn = words.shape
+    lanes = []
+    vmask = jnp.uint32((1 << bits) - 1)
+    for lane in range(vpw):
+        shift = jnp.uint32(lane * lane_width)
+        lanes.append((words >> shift) & vmask)
+    v = jnp.stack(lanes, axis=1)  # [bk, vpw, bn]
+    v = v.reshape(bk * vpw, bn).astype(jnp.int32)
+    sign = (v >> (bits - 1)) & 1
+    v = v - (sign << bits)
+    return (v.astype(jnp.float32) * scale.astype(jnp.float32)).astype(out_dtype)
+
+
+def _kernel(x_ref, w_ref, s_ref, o_ref, acc_ref, *, bits, lane_width, vpw,
+            n_k_steps):
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    w = _unpack_dequant(w_ref[...], s_ref[...], bits, lane_width, vpw,
+                        x_ref.dtype)
+    acc_ref[...] += jnp.dot(
+        x_ref[...], w, preferred_element_type=jnp.float32
+    )
+
+    @pl.when(k == n_k_steps - 1)
+    def _store():
+        o_ref[...] = acc_ref[...].astype(o_ref.dtype)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("k", "cfg", "block_m", "block_n", "block_kw", "interpret"),
+)
+def samd_matmul(
+    x: jax.Array,
+    packed: jax.Array,
+    scale: jax.Array,
+    k: int,
+    cfg: QuantConfig,
+    *,
+    block_m: int = 128,
+    block_n: int = 128,
+    block_kw: int = 64,
+    interpret: bool = False,
+) -> jax.Array:
+    """out[M, N] = x[M, K] @ dequant(packed[K/vpw, N], scale[1, N]).
+
+    K must be a multiple of values_per_word * block_kw is relaxed by
+    clamping the block to the full (padded) packed extent.
+    """
+    if cfg.group_size is not None:
+        raise NotImplementedError("pallas path supports per-channel scales")
+    m, kx = x.shape
+    assert kx == k, (kx, k)
+    kw, n = packed.shape
+    vpw = cfg.values_per_word
+    assert kw * vpw >= k, (kw, vpw, k)
+    # pad x so the unpacked lanes line up with the packed words
+    if kw * vpw != k:
+        x = jnp.pad(x, ((0, 0), (0, kw * vpw - k)))
+    bm = min(block_m, m)
+    bn = min(block_n, n)
+    bkw = min(block_kw, kw)
+    grid = (pl.cdiv(m, bm), pl.cdiv(n, bn), pl.cdiv(kw, bkw))
+
+    out = pl.pallas_call(
+        functools.partial(
+            _kernel, bits=cfg.bits, lane_width=cfg.lane_width, vpw=vpw,
+            n_k_steps=grid[2],
+        ),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, bkw * vpw), lambda i, j, kk: (i, kk)),
+            pl.BlockSpec((bkw, bn), lambda i, j, kk: (kk, j)),
+            pl.BlockSpec((1, bn), lambda i, j, kk: (0, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), x.dtype),
+        scratch_shapes=[pltpu.VMEM((bm, bn), jnp.float32)],
+        interpret=interpret,
+    )(x, packed, scale)
+    return out

@@ -1,0 +1,423 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: lower + compile every (arch x shape) cell on the
+production meshes and extract memory / cost / collective analysis.
+
+This file MUST set XLA_FLAGS before any other import (jax locks the device
+count on first init) — hence the unusual import order above.
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.dryrun --arch qwen3-14b --shape train_4k
+  PYTHONPATH=src python -m repro.launch.dryrun --all [--multi-pod] [--quant-bits 4]
+  PYTHONPATH=src python -m repro.launch.dryrun --all --both-meshes --out artifacts/
+"""
+import argparse      # noqa: E402
+import dataclasses   # noqa: E402
+import functools     # noqa: E402
+import json          # noqa: E402
+import time          # noqa: E402
+import traceback     # noqa: E402
+
+import jax           # noqa: E402
+import jax.numpy as jnp  # noqa: E402
+import numpy as np   # noqa: E402
+from jax.sharding import NamedSharding, PartitionSpec as P  # noqa: E402
+
+from repro.configs import ARCHS, SHAPES, RunConfig, get_arch  # noqa: E402
+from repro.distributed.sharding import (  # noqa: E402
+    batch_pspec, cache_pspecs, data_pspec, param_pspecs,
+)
+from repro.launch.analytic_costs import cell_cost  # noqa: E402
+from repro.launch import steps as steps_mod  # noqa: E402
+from repro.launch.hlo_analysis import (  # noqa: E402
+    Roofline, model_flops, parse_collectives,
+)
+from repro.launch.mesh import make_production_mesh  # noqa: E402
+from repro.models import (  # noqa: E402
+    build_template, param_count, quantized_spec_tree, shape_dtype_from_spec,
+)
+from repro.models.layers import QuantizedTensor  # noqa: E402
+from repro.models.spec import TensorSpec  # noqa: E402
+from repro.optim.adamw import AdamWState  # noqa: E402
+from repro.quant.config import QuantConfig  # noqa: E402
+
+
+def _sds_with_sharding(spec_tree, pspec_tree, mesh):
+    """Attach NamedShardings to a ShapeDtypeStruct tree."""
+
+    def attach(sds, ps):
+        return jax.ShapeDtypeStruct(
+            sds.shape, sds.dtype, sharding=NamedSharding(mesh, ps)
+        )
+
+    return jax.tree.map(
+        attach, spec_tree, pspec_tree,
+        is_leaf=lambda x: isinstance(x, jax.ShapeDtypeStruct),
+    )
+
+
+def _replicated(spec_tree, mesh):
+    return jax.tree.map(
+        lambda sds: jax.ShapeDtypeStruct(
+            sds.shape, sds.dtype, sharding=NamedSharding(mesh, P())
+        ),
+        spec_tree,
+        is_leaf=lambda x: isinstance(x, jax.ShapeDtypeStruct),
+    )
+
+
+def active_params(cfg) -> int:
+    """Parameter count with only top_k of n_experts active (for 6·N·D)."""
+    tmpl = build_template(cfg)
+    total = param_count(tmpl)
+    if cfg.family != "moe":
+        return total
+    expert_leaves = jax.tree.leaves(
+        tmpl, is_leaf=lambda x: isinstance(x, TensorSpec)
+    )
+    expert = sum(
+        int(np.prod(sp.shape))
+        for sp in expert_leaves
+        if isinstance(sp, TensorSpec) and "experts" in (sp.axes or ())
+    )
+    return total - expert + expert * cfg.top_k // cfg.n_experts
+
+
+def lower_cell(
+    arch_name: str,
+    shape_name: str,
+    *,
+    multi_pod: bool = False,
+    quant_bits: int | None = None,
+    kv_bits: int | None = None,
+    remat: str = "none",
+    seq_shard_acts: bool = False,
+    mode_override: str | None = None,
+    verbose: bool = True,
+):
+    """Lower + compile one cell. Returns a result dict (or raises)."""
+    cfg = get_arch(arch_name)
+    shape = SHAPES[shape_name]
+    if shape_name == "long_500k" and not cfg.subquadratic:
+        return {
+            "cell": f"{arch_name}/{shape_name}",
+            "status": "skipped",
+            "reason": "full-attention arch; long_500k needs sub-quadratic "
+                      "attention (DESIGN.md §Arch-applicability)",
+        }
+
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    chips = int(np.prod(list(mesh.shape.values())))
+    qcfg = (
+        QuantConfig(bits=quant_bits, backend="xla")
+        if quant_bits and shape.kind != "train"
+        else QuantConfig(enabled=False)
+    )
+    run = RunConfig(arch=cfg, shape=shape, quant=qcfg, remat=remat)
+
+    # train + uniform-family prefill use the stacked scan-over-layers
+    # layout (compile-time O(1) in depth); decode (and hybrid prefill,
+    # whose shared-attn caches are non-uniform) uses the list layout.
+    use_stacked = shape.kind == "train" or (
+        shape.kind == "prefill" and cfg.family != "hybrid_mamba2"
+    )
+    template = build_template(cfg, stacked=use_stacked)
+    # train + prefill amortize FSDP weight gathers over a full sequence of
+    # compute; decode is latency-bound and uses 1D model sharding so each
+    # weight byte is read exactly once per step. ``mode_override`` lets the
+    # hillclimb try e.g. serve-mode (no-FSDP) sharding for prefill.
+    mode = mode_override or ("serve" if shape.kind == "decode" else "train")
+    if qcfg.enabled:
+        pspec_tree = param_pspecs(template, mesh, qcfg, mode=mode)
+        param_sds = quantized_spec_tree(template, qcfg)
+    else:
+        pspec_tree = param_pspecs(template, mesh, mode=mode)
+        param_sds = shape_dtype_from_spec(template)
+    params_in = _sds_with_sharding(param_sds, pspec_tree, mesh)
+
+    specs = steps_mod.input_specs(cfg, shape, kv_bits=kv_bits)
+    bspec = data_pspec(shape.global_batch, mesh)
+    if seq_shard_acts and shape.kind in ("train", "prefill"):
+        # Megatron-SP: residual stream sharded on ('model') over sequence
+        from repro.models.model import set_activation_sharding
+
+        set_activation_sharding(
+            NamedSharding(mesh, P(bspec[0], "model", None))
+        )
+    else:
+        from repro.models.model import set_activation_sharding
+
+        set_activation_sharding(None)
+    t0 = time.time()
+
+    if shape.kind == "train":
+        step = steps_mod.make_train_step(cfg, run)
+        opt_sds = jax.eval_shape(
+            lambda p: AdamWState(
+                jnp.zeros((), jnp.int32),
+                jax.tree.map(lambda x: jnp.zeros(x.shape, jnp.float32), p),
+                jax.tree.map(lambda x: jnp.zeros(x.shape, jnp.float32), p),
+            ),
+            param_sds,
+        )
+        opt_pspecs = AdamWState(P(), pspec_tree, pspec_tree)
+        opt_in = _sds_with_sharding(opt_sds, opt_pspecs, mesh)
+        bspec = data_pspec(shape.global_batch, mesh)
+        batch_in = _sds_with_sharding(
+            specs["batch"],
+            {k: P(bspec[0], *([None] * (len(v.shape) - 1)))
+             for k, v in specs["batch"].items()},
+            mesh,
+        )
+        # donate params + opt state (aliased in-place update, as in prod);
+        # pin output shardings to the input ones so aliasing is legal
+        metrics_sh = {
+            k: NamedSharding(mesh, P())
+            for k in ("loss", "lr", "grad_norm")
+        }
+        lowered = jax.jit(
+            step,
+            donate_argnums=(0, 1),
+            out_shardings=(
+                jax.tree.map(lambda s: s.sharding, params_in,
+                             is_leaf=lambda x: isinstance(x, jax.ShapeDtypeStruct)),
+                jax.tree.map(lambda s: s.sharding, opt_in,
+                             is_leaf=lambda x: isinstance(x, jax.ShapeDtypeStruct)),
+                metrics_sh,
+            ),
+        ).lower(params_in, opt_in, batch_in)
+    elif shape.kind == "prefill":
+        step = steps_mod.make_prefill_step(cfg, run)
+        bspec = data_pspec(shape.global_batch, mesh)
+        batch_in = _sds_with_sharding(
+            specs["batch"],
+            {k: P(bspec[0], *([None] * (len(v.shape) - 1)))
+             for k, v in specs["batch"].items()},
+            mesh,
+        )
+        cache_in = _sds_with_sharding(
+            specs["cache"],
+            cache_pspecs(cfg, shape, mesh,
+                         stacked=(cfg.family != "hybrid_mamba2")),
+            mesh,
+        )
+        # donate the cache buffer (in-place fill)
+        lowered = jax.jit(
+            step,
+            donate_argnums=(2,),
+            out_shardings=(
+                NamedSharding(mesh, P(bspec[0])),
+                jax.tree.map(lambda s: s.sharding, cache_in,
+                             is_leaf=lambda x: isinstance(x, jax.ShapeDtypeStruct)),
+            ),
+        ).lower(params_in, batch_in, cache_in)
+    else:  # decode
+        step = steps_mod.make_serve_step(cfg, run)
+        bspec = data_pspec(shape.global_batch, mesh)
+        tok_in = _sds_with_sharding(
+            specs["tokens"], P(bspec[0], None), mesh
+        )
+        cache_in = _sds_with_sharding(
+            specs["cache"], cache_pspecs(cfg, shape, mesh, kv_bits=kv_bits),
+            mesh,
+        )
+        pos_in = jax.ShapeDtypeStruct(
+            (), jnp.int32, sharding=NamedSharding(mesh, P())
+        )
+        # donate the KV cache / recurrent state (in-place decode update)
+        lowered = jax.jit(
+            step,
+            donate_argnums=(2,),
+            out_shardings=(
+                NamedSharding(mesh, P(bspec[0])),
+                jax.tree.map(lambda s: s.sharding, cache_in,
+                             is_leaf=lambda x: isinstance(x, jax.ShapeDtypeStruct)),
+            ),
+        ).lower(params_in, tok_in, cache_in, pos_in)
+
+    t_lower = time.time() - t0
+    t0 = time.time()
+    compiled = lowered.compile()
+    t_compile = time.time() - t0
+
+    mem = compiled.memory_analysis()
+    cost = compiled.cost_analysis()
+    if isinstance(cost, list):
+        cost = cost[0]
+    hlo = compiled.as_text()
+    # the layer scan is the only outer while with collectives; its body
+    # executes n_layers times (train cells use the stacked scan layout)
+    loop_mult = cfg.n_layers if shape.kind == "train" else 1
+    coll = parse_collectives(hlo, loop_multiplier=loop_mult)
+    xla_roof = Roofline(
+        float(cost.get("flops", 0.0)),
+        float(cost.get("bytes accessed", 0.0)),
+        float(coll.total_bytes),
+        chips,
+    )
+    # analytic model (primary roofline source — XLA undercounts scan
+    # bodies and the CPU backend overcounts fused bytes; see
+    # launch/analytic_costs.py and EXPERIMENTS.md §Dry-run calibration)
+    acost = cell_cost(cfg, shape, quant_bits if qcfg.enabled else None,
+                      kv_bits=kv_bits)
+    roof = Roofline(
+        acost.flops / chips,
+        acost.hbm_bytes / chips,
+        float(coll.total_bytes),
+        chips,
+    )
+    n_active = active_params(cfg)
+    tokens = (
+        shape.global_batch * shape.seq_len
+        if shape.kind != "decode"
+        else shape.global_batch
+    )
+    mf = model_flops(n_active, tokens, shape.kind)
+
+    result = {
+        "cell": f"{arch_name}/{shape_name}",
+        "status": "ok",
+        "mesh": "2x16x16" if multi_pod else "16x16",
+        "chips": chips,
+        "quant_bits": quant_bits if qcfg.enabled else None,
+        "kv_bits": kv_bits,
+        "seq_shard_acts": bool(seq_shard_acts),
+        "sharding_mode": mode,
+        "lower_s": round(t_lower, 1),
+        "compile_s": round(t_compile, 1),
+        "flops": acost.flops,
+        "hbm_bytes": acost.hbm_bytes,
+        "weight_bytes": acost.weight_bytes,
+        "cache_bytes": acost.cache_bytes,
+        "xla_flops_dev": xla_roof.flops,
+        "xla_bytes_dev": xla_roof.hbm_bytes,
+        "collective_bytes": roof.collective_bytes,
+        "collectives": coll.bytes_by_kind,
+        "collective_counts": coll.count_by_kind,
+        "compute_s": roof.compute_s,
+        "memory_s": roof.memory_s,
+        "collective_s": roof.collective_s,
+        "dominant": roof.dominant,
+        "model_flops": mf,
+        "useful_flop_frac": mf / acost.flops if acost.flops else 0.0,
+        "memory_analysis": _mem_dict(mem),
+    }
+    md = result["memory_analysis"]
+    if md:
+        # HBM traffic lower bound: args read once, outputs written once,
+        # temps written+read (tighter than XLA CPU's fused 'bytes accessed')
+        lb = (
+            md.get("argument_size_in_bytes", 0)
+            + md.get("output_size_in_bytes", 0)
+            + 2 * md.get("temp_size_in_bytes", 0)
+        )
+        result["memory_lb_s"] = lb / 819e9
+    if verbose:
+        print(f"== {result['cell']} mesh={result['mesh']} "
+              f"quant={result['quant_bits']} ==")
+        print(f"  lower {t_lower:.1f}s compile {t_compile:.1f}s")
+        print(f"  memory_analysis: {result['memory_analysis']}")
+        print(f"  analytic/chip: flops={roof.flops:.3e} "
+              f"bytes={roof.hbm_bytes:.3e} coll={roof.collective_bytes:.3e}"
+              f"  (xla cross-check: flops={xla_roof.flops:.3e} "
+              f"bytes={xla_roof.hbm_bytes:.3e})")
+        print(f"  roofline: compute={roof.compute_s*1e3:.2f}ms "
+              f"memory={roof.memory_s*1e3:.2f}ms "
+              f"collective={roof.collective_s*1e3:.2f}ms "
+              f"-> {roof.dominant}-bound")
+        print(f"  MODEL_FLOPS/ANALYTIC = {result['useful_flop_frac']:.3f}")
+    return result
+
+
+def _mem_dict(mem) -> dict:
+    if mem is None:
+        return {}
+    out = {}
+    for k in ("argument_size_in_bytes", "output_size_in_bytes",
+              "temp_size_in_bytes", "generated_code_size_in_bytes",
+              "alias_size_in_bytes"):
+        v = getattr(mem, k, None)
+        if v is not None:
+            out[k] = int(v)
+    per_device = (
+        out.get("argument_size_in_bytes", 0)
+        + out.get("temp_size_in_bytes", 0)
+        + out.get("output_size_in_bytes", 0)
+        - out.get("alias_size_in_bytes", 0)
+    )
+    out["per_device_total_bytes"] = per_device
+    out["fits_16gb_hbm"] = bool(per_device < 16 * 1024**3)
+    return out
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--both-meshes", action="store_true")
+    ap.add_argument("--quant-bits", type=int, default=None)
+    ap.add_argument("--kv-bits", type=int, default=None,
+                    help="int8 KV cache (decode cells)")
+    ap.add_argument("--seq-shard-acts", action="store_true",
+                    help="sequence-parallel activation sharding "
+                         "(train/prefill cells)")
+    ap.add_argument("--mode-override", default=None,
+                    choices=("train", "serve"),
+                    help="force FSDP ('train') or 1-D model ('serve') "
+                         "weight sharding regardless of the cell kind")
+    ap.add_argument("--remat", default="block",
+                    help="'block' (default, needed for 4k-seq training "
+                         "memory) or 'none'; applies to train cells only")
+    ap.add_argument("--out", default=None, help="write JSONL results here")
+    args = ap.parse_args()
+
+    cells = []
+    if args.all:
+        for a in ARCHS:
+            for s in SHAPES:
+                cells.append((a, s))
+    else:
+        assert args.arch and args.shape, "--arch/--shape or --all"
+        cells.append((args.arch, args.shape))
+
+    meshes = [args.multi_pod]
+    if args.both_meshes:
+        meshes = [False, True]
+
+    results = []
+    failed = 0
+    for arch, shp in cells:
+        for mp in meshes:
+            try:
+                r = lower_cell(
+                    arch, shp, multi_pod=mp,
+                    quant_bits=args.quant_bits, kv_bits=args.kv_bits,
+                    seq_shard_acts=args.seq_shard_acts, remat=args.remat,
+                    mode_override=args.mode_override,
+                )
+            except Exception as e:  # a failure here is a bug in the system
+                traceback.print_exc()
+                r = {
+                    "cell": f"{arch}/{shp}",
+                    "mesh": "2x16x16" if mp else "16x16",
+                    "status": "FAILED",
+                    "error": f"{type(e).__name__}: {e}",
+                }
+                failed += 1
+            results.append(r)
+            if args.out:
+                with open(args.out, "a") as f:
+                    f.write(json.dumps(r) + "\n")
+            jax.clear_caches()  # keep host RSS bounded across 80 compiles
+
+    ok = sum(1 for r in results if r["status"] == "ok")
+    sk = sum(1 for r in results if r["status"] == "skipped")
+    print(f"\n==== dry-run: {ok} ok / {sk} skipped / {failed} FAILED ====")
+    return 1 if failed else 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -1,0 +1,204 @@
+"""Post-SPMD HLO analysis: collective traffic + roofline terms.
+
+``cost_analysis`` gives FLOPs and HBM bytes but not collective bytes, so we
+parse the optimized (partitioned) HLO text: build a symbol table of every
+defined value's shape, then sum operand sizes for each collective op
+(all-gather / all-reduce / reduce-scatter / all-to-all / collective-permute),
+as specified for the §Roofline deliverable.
+
+Hardware constants (TPU v5e class, per chip):
+  peak bf16 compute 197 TFLOP/s, HBM BW 819 GB/s, ICI ~50 GB/s/link.
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from collections import defaultdict
+
+PEAK_FLOPS = 197e12
+HBM_BW = 819e9
+ICI_BW = 50e9
+
+_DTYPE_BYTES = {
+    "pred": 1, "s4": 1, "u4": 1, "s8": 1, "u8": 1,
+    "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4,
+    "s64": 8, "u64": 8, "f64": 8,
+}
+
+_COLLECTIVES = (
+    "all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+    "collective-permute",
+)
+
+# %name = TYPE op(...)   (TYPE may be a tuple '(bf16[..], ..)')
+_DEF_RE = re.compile(r"^\s*(?:ROOT\s+)?%?([\w.\-]+)\s*=\s*(.+?)\s+"
+                     r"([\w\-]+)\((.*)\)", re.ASCII)
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+
+
+def _shape_bytes(type_str: str) -> int:
+    """Total bytes of a (possibly tuple) HLO type string."""
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(type_str):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+@dataclasses.dataclass
+class CollectiveStats:
+    bytes_by_kind: dict
+    count_by_kind: dict
+
+    @property
+    def total_bytes(self) -> int:
+        return sum(self.bytes_by_kind.values())
+
+
+_COMP_START_RE = re.compile(r"^(ENTRY\s+)?%?([\w.\-]+)\s*\(.*\)\s*->.*\{")
+_WHILE_RE = re.compile(r"body=%?([\w.\-]+)")
+
+
+def parse_collectives(hlo_text: str, loop_multiplier: int = 1) -> CollectiveStats:
+    """Sum operand sizes of every collective in (partitioned) HLO text.
+
+    XLA reports a while/scan body once; collectives found inside a while
+    *body computation* are multiplied by ``loop_multiplier`` (callers pass
+    the known trip count of the program's outer layer-scan; programs
+    without scans pass 1). This mirrors the flop treatment in
+    analytic_costs.py and is validated against unrolled lowerings in
+    EXPERIMENTS.md §Dry-run.
+    """
+    shapes: dict[str, int] = {}
+    per_comp_bytes: dict[str, dict] = defaultdict(lambda: defaultdict(int))
+    per_comp_count: dict[str, dict] = defaultdict(lambda: defaultdict(int))
+    while_bodies: set[str] = set()
+    current = "__toplevel__"
+    entry = None
+    for line in hlo_text.splitlines():
+        cm = _COMP_START_RE.match(line)
+        if cm:
+            current = cm.group(2)
+            if cm.group(1):
+                entry = current
+            continue
+        if "while(" in line:
+            wb = _WHILE_RE.search(line)
+            if wb:
+                while_bodies.add(wb.group(1))
+        m = _DEF_RE.match(line)
+        if not m:
+            continue
+        name, type_str, op, args = m.groups()
+        shapes[name] = _shape_bytes(type_str)
+        base = op
+        for suf in ("-start", "-done"):
+            if base.endswith(suf):
+                base = base[: -len(suf)]
+        if base in _COLLECTIVES and not op.endswith("-done"):
+            opb = 0
+            for ref in re.findall(r"%([\w.\-]+)", args):
+                opb += shapes.get(ref, 0)
+            if opb == 0:
+                opb = _shape_bytes(type_str)
+                if base == "all-gather":
+                    g = _group_size(line)
+                    opb = opb // max(g, 1)
+            per_comp_bytes[current][base] += opb
+            per_comp_count[current][base] += 1
+
+    bytes_by = defaultdict(int)
+    count_by = defaultdict(int)
+    for comp, kinds in per_comp_bytes.items():
+        mult = loop_multiplier if comp in while_bodies else 1
+        for kind, v in kinds.items():
+            bytes_by[kind] += v * mult
+            count_by[kind] += per_comp_count[comp][kind] * mult
+    return CollectiveStats(dict(bytes_by), dict(count_by))
+
+
+def _group_size(line: str) -> int:
+    m = re.search(r"replica_groups=\{\{([^}]*)\}", line)
+    if not m:
+        m = re.search(r"replica_groups=\[(\d+),(\d+)\]", line)
+        if m:
+            return int(m.group(2))
+        return 1
+    return len(m.group(1).split(","))
+
+
+@dataclasses.dataclass
+class Roofline:
+    """Roofline terms from PER-DEVICE quantities.
+
+    XLA's ``cost_analysis()`` on an SPMD module reports per-partition flops
+    and bytes (calibrated against analytic matmuls in EXPERIMENTS.md
+    §Dry-run), and the parsed HLO collectives are the per-device program.
+    So ``term = per_device_quantity / per_chip_rate``, which equals the
+    spec's ``global_quantity / (chips * rate)``.
+    """
+
+    flops: float             # per device
+    hbm_bytes: float         # per device (CPU-backend fusion overcount noted)
+    collective_bytes: float  # per device
+    chips: int
+
+    @property
+    def compute_s(self) -> float:
+        return self.flops / PEAK_FLOPS
+
+    @property
+    def memory_s(self) -> float:
+        return self.hbm_bytes / HBM_BW
+
+    @property
+    def collective_s(self) -> float:
+        return self.collective_bytes / ICI_BW
+
+    @property
+    def dominant(self) -> str:
+        terms = {
+            "compute": self.compute_s,
+            "memory": self.memory_s,
+            "collective": self.collective_s,
+        }
+        return max(terms, key=terms.get)
+
+    @property
+    def bound_s(self) -> float:
+        return max(self.compute_s, self.memory_s, self.collective_s)
+
+    def as_dict(self) -> dict:
+        return {
+            "flops": self.flops,
+            "hbm_bytes": self.hbm_bytes,
+            "collective_bytes": self.collective_bytes,
+            "chips": self.chips,
+            "compute_s": self.compute_s,
+            "memory_s": self.memory_s,
+            "collective_s": self.collective_s,
+            "dominant": self.dominant,
+        }
+
+
+def model_flops(n_params_active: int, tokens: int, kind: str) -> float:
+    """6·N·D for training (fwd+bwd+update), 2·N·D for inference.
+    Callers pass N_active for MoE."""
+    factor = 6.0 if kind == "train" else 2.0
+    return factor * n_params_active * tokens
+
+
+def roofline_from_compiled(compiled, chips: int) -> Roofline:
+    cost = compiled.cost_analysis()
+    if isinstance(cost, list):  # older API returns [dict]
+        cost = cost[0]
+    flops = float(cost.get("flops", 0.0))
+    hbm = float(cost.get("bytes accessed", 0.0))
+    stats = parse_collectives(compiled.as_text())
+    return Roofline(flops, hbm, stats.total_bytes, chips)

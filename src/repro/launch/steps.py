@@ -1,0 +1,166 @@
+"""Step functions: the jit/lower targets for training and serving.
+
+``train_*`` cells lower ``train_step`` (fwd + bwd + AdamW); ``prefill_*``
+cells lower ``prefill_step``; ``decode_*`` / ``long_*`` cells lower
+``serve_step`` (ONE new token against a seq_len KV cache / recurrent
+state), per the assignment spec.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig, RunConfig, ShapeConfig
+from repro.models import forward, init_cache
+from repro.optim import adamw_update, cosine_warmup
+
+
+def lm_loss(logits: jax.Array, targets: jax.Array) -> jax.Array:
+    """Token-mean cross entropy in f32."""
+    lf = logits.astype(jnp.float32)
+    lse = jax.nn.logsumexp(lf, axis=-1)
+    tgt = jnp.take_along_axis(lf, targets[..., None], axis=-1)[..., 0]
+    return jnp.mean(lse - tgt)
+
+
+def make_loss_fn(cfg: ArchConfig, run: RunConfig):
+    def loss_fn(params, batch):
+        prefix = batch.get("prefix_embeds")
+        logits, _, aux = forward(
+            params, batch["tokens"], cfg,
+            prefix_embeds=prefix, remat=(run.remat == "block"),
+        )
+        if prefix is not None:  # frontend stub tokens carry no LM targets
+            logits = logits[:, prefix.shape[1]:]
+        loss = lm_loss(logits, batch["targets"])
+        return loss + 0.01 * aux, loss
+
+    return loss_fn
+
+
+def make_train_step(cfg: ArchConfig, run: RunConfig):
+    loss_fn = make_loss_fn(cfg, run)
+
+    def train_step(params, opt_state, batch):
+        lr = cosine_warmup(opt_state.step, peak_lr=run.learning_rate,
+                           warmup=run.lr_warmup)
+
+        if run.grad_accum > 1:
+            b = batch["tokens"].shape[0]
+            mb = b // run.grad_accum
+
+            def micro(acc, i):
+                sl = jax.tree.map(
+                    lambda x: jax.lax.dynamic_slice_in_dim(x, i * mb, mb, 0),
+                    batch,
+                )
+                (l, raw), g = jax.value_and_grad(loss_fn, has_aux=True)(
+                    params, sl
+                )
+                acc_g, acc_l = acc
+                return (
+                    jax.tree.map(jnp.add, acc_g, g),
+                    acc_l + raw / run.grad_accum,
+                ), None
+
+            zero = jax.tree.map(
+                lambda p: jnp.zeros(p.shape, jnp.float32), params
+            )
+            (gsum, loss), _ = jax.lax.scan(
+                micro, (zero, jnp.zeros((), jnp.float32)),
+                jnp.arange(run.grad_accum),
+            )
+            grads = jax.tree.map(lambda g: g / run.grad_accum, gsum)
+        else:
+            (l, loss), grads = jax.value_and_grad(loss_fn, has_aux=True)(
+                params, batch
+            )
+
+        new_params, new_opt, metrics = adamw_update(
+            grads, opt_state, params, lr,
+            weight_decay=run.weight_decay, grad_clip=run.grad_clip,
+        )
+        return new_params, new_opt, {"loss": loss, "lr": lr, **metrics}
+
+    return train_step
+
+
+def make_prefill_step(cfg: ArchConfig, run: RunConfig):
+    def prefill_step(params, batch, cache):
+        prefix = batch.get("prefix_embeds")
+        logits, new_cache, _ = forward(
+            params, batch["tokens"], cfg,
+            cache=cache, cache_index=0, prefix_embeds=prefix,
+        )
+        next_tok = jnp.argmax(logits[:, -1].astype(jnp.float32), axis=-1)
+        return next_tok.astype(jnp.int32), new_cache
+
+    return prefill_step
+
+
+def make_serve_step(cfg: ArchConfig, run: RunConfig):
+    def serve_step(params, tokens, cache, pos):
+        """One decode step: tokens [B,1] at scalar position ``pos``."""
+        b = tokens.shape[0]
+        positions = jnp.broadcast_to(
+            pos.astype(jnp.int32), (b, 1)
+        )
+        logits, new_cache, _ = forward(
+            params, tokens, cfg,
+            positions=positions, cache=cache, cache_index=pos,
+        )
+        next_tok = jnp.argmax(logits[:, -1].astype(jnp.float32), axis=-1)
+        return next_tok.astype(jnp.int32), new_cache
+
+    return serve_step
+
+
+# ---------------------------------------------------------------------------
+# input specs (ShapeDtypeStruct stand-ins — no allocation)
+# ---------------------------------------------------------------------------
+
+def input_specs(cfg: ArchConfig, shape: ShapeConfig,
+                kv_bits: Optional[int] = None) -> dict:
+    """Stand-ins for every model input of this (arch x shape) cell.
+
+    For decode cells the KV-cache/state tree is part of the inputs; for the
+    modality-stub archs ([audio]/[vlm]) precomputed frame/patch embeddings
+    are included on train/prefill.
+    """
+    b, s = shape.global_batch, shape.seq_len
+    specs: dict = {}
+    if shape.kind == "train":
+        specs["batch"] = {
+            "tokens": jax.ShapeDtypeStruct((b, s), jnp.int32),
+            "targets": jax.ShapeDtypeStruct((b, s), jnp.int32),
+        }
+    elif shape.kind == "prefill":
+        specs["batch"] = {
+            "tokens": jax.ShapeDtypeStruct((b, s), jnp.int32),
+        }
+        # uniform families prefill via scan-over-layers with a stacked
+        # cache; the hybrid keeps per-layer caches (see model.init_cache)
+        specs["cache"] = jax.eval_shape(
+            functools.partial(
+                init_cache, cfg, b, s + _prefix_len(cfg),
+                stacked=(cfg.family != "hybrid_mamba2"),
+            )
+        )
+    elif shape.kind == "decode":
+        specs["tokens"] = jax.ShapeDtypeStruct((b, 1), jnp.int32)
+        specs["cache"] = jax.eval_shape(
+            functools.partial(init_cache, cfg, b, s, kv_bits=kv_bits)
+        )
+        specs["pos"] = jax.ShapeDtypeStruct((), jnp.int32)
+    if shape.kind in ("train", "prefill") and cfg.n_prefix_embeds:
+        specs["batch"]["prefix_embeds"] = jax.ShapeDtypeStruct(
+            (b, cfg.n_prefix_embeds, cfg.d_model), jnp.bfloat16
+        )
+    return specs
+
+
+def _prefix_len(cfg: ArchConfig) -> int:
+    return cfg.n_prefix_embeds

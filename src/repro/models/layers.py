@@ -1,0 +1,363 @@
+"""Transformer building blocks: norms, RoPE, GQA attention, MLPs, MoE.
+
+Design notes:
+  * All matmuls go through ``apply_linear`` so the SAMD quantization backend
+    can swap packed weights in transparently.
+  * Attention is query-chunked (lax.map over chunks) so 32k-token prefill
+    never materializes an [S, S] score tensor — peak live memory is
+    [B, H, chunk, S] per chunk.
+  * MoE uses grouped capacity-based dispatch (GShard-style einsums) with
+    ~2k-token groups so the one-hot dispatch tensor stays ~tens of MB per
+    device at 32k sequence lengths.
+  * Norms and softmax run in f32; matmul outputs stay bf16.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.quant.config import QuantConfig
+from repro.quant.packing import qmatmul
+
+
+# ---------------------------------------------------------------------------
+# linear (+ quantized linear) application
+# ---------------------------------------------------------------------------
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass
+class QuantizedTensor:
+    """SAMD-packed weight: uint32 words + per-channel scale (+ static meta).
+
+    The weight is packed along its reduction axis, stored 2D as
+    [K/values_per_word, prod(rest)]. ``orig_shape``/``axis`` restore the
+    full layout for non-matmul consumers (einsum sites materialize).
+    """
+
+    packed: jax.Array
+    scale: jax.Array
+    orig_shape: tuple  # static
+    axis: int          # static: reduction axis in orig_shape
+    cfg: QuantConfig   # static
+
+    @property
+    def k(self) -> int:
+        return self.orig_shape[self.axis]
+
+    def tree_flatten(self):
+        return (self.packed, self.scale), (self.orig_shape, self.axis, self.cfg)
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        return cls(children[0], children[1], *aux)
+
+
+def materialize(w, dtype=jnp.bfloat16) -> jax.Array:
+    """Dense view of a (possibly SAMD-packed) weight."""
+    if not isinstance(w, QuantizedTensor):
+        return w
+    from repro.quant.packing import dequant_weights
+
+    k = w.k
+    rest = tuple(s for i, s in enumerate(w.orig_shape) if i != w.axis)
+    dense2d = dequant_weights(w.packed, w.scale, k, w.cfg, dtype=dtype)
+    dense = dense2d.reshape((k,) + rest)
+    return jnp.moveaxis(dense, 0, w.axis)
+
+
+def apply_linear(w, x: jax.Array, precision=None) -> jax.Array:
+    """x[..., K] @ w[K, N] where w is an array or a QuantizedTensor."""
+    if isinstance(w, QuantizedTensor):
+        if len(w.orig_shape) == 2 and w.axis == 0:
+            return qmatmul(x, w.packed, w.scale, w.k, w.cfg)
+        return jnp.matmul(x, materialize(w, x.dtype), precision=precision)
+    return jnp.matmul(x, w, precision=precision)
+
+
+# ---------------------------------------------------------------------------
+# norms / rope
+# ---------------------------------------------------------------------------
+
+def rms_norm(x: jax.Array, w: jax.Array, eps: float = 1e-5) -> jax.Array:
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    out = xf * jax.lax.rsqrt(var + eps)
+    return (out * w.astype(jnp.float32)).astype(x.dtype)
+
+
+def rope_tables(positions: jax.Array, head_dim: int, theta: float):
+    """positions [..., S] -> (sin, cos) [..., S, head_dim//2] f32."""
+    half = head_dim // 2
+    freqs = 1.0 / (
+        theta ** (jnp.arange(0, half, dtype=jnp.float32) / half)
+    )
+    ang = positions.astype(jnp.float32)[..., None] * freqs
+    return jnp.sin(ang), jnp.cos(ang)
+
+
+def apply_rope(x: jax.Array, sin: jax.Array, cos: jax.Array) -> jax.Array:
+    """x [..., S, H, D]; sin/cos [..., S, D//2]."""
+    half = x.shape[-1] // 2
+    x1, x2 = x[..., :half], x[..., half:]
+    s = sin[..., None, :]  # broadcast over heads
+    c = cos[..., None, :]
+    xf1, xf2 = x1.astype(jnp.float32), x2.astype(jnp.float32)
+    return jnp.concatenate(
+        [xf1 * c - xf2 * s, xf2 * c + xf1 * s], axis=-1
+    ).astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# attention
+# ---------------------------------------------------------------------------
+
+def _attend_chunk(q, k, v, q_pos, k_pos, scale):
+    """q [B,Cq,Hkv,G,dh]; k/v [B,S,Hkv,dh] -> [B,Cq,Hkv,G,dh].
+
+    Masks keys with k_pos > q_pos (causal) or k_pos < 0 (unfilled cache).
+    """
+    scores = jnp.einsum(
+        "bqhgd,bshd->bhgqs", q, k, preferred_element_type=jnp.float32
+    )
+    scores = scores * scale
+    mask = (k_pos[:, None, None, None, :] <= q_pos[:, None, None, :, None]) & (
+        k_pos[:, None, None, None, :] >= 0
+    )
+    scores = jnp.where(mask, scores, -1e30)
+    probs = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bhgqs,bshd->bqhgd", probs.astype(v.dtype), v)
+    return out
+
+
+def attention(
+    q: jax.Array,        # [B, Sq, H, dh]
+    k: jax.Array,        # [B, Sk, Hkv, dh]
+    v: jax.Array,        # [B, Sk, Hkv, dh]
+    q_pos: jax.Array,    # [B, Sq] int32
+    k_pos: jax.Array,    # [B, Sk] int32 (negative = masked/unfilled)
+    chunk: int = 1024,
+) -> jax.Array:
+    """Causal GQA attention, query-chunked to bound live memory."""
+    b, sq, h, dh = q.shape
+    hkv = k.shape[2]
+    g = h // hkv
+    scale = 1.0 / (dh ** 0.5)
+    qg = q.reshape(b, sq, hkv, g, dh)
+
+    if sq <= chunk:
+        out = _attend_chunk(qg, k, v, q_pos, k_pos, scale)
+        return out.reshape(b, sq, h, dh)
+
+    if sq % chunk:  # pad queries to a whole number of chunks, slice after
+        pad = chunk - sq % chunk
+        qg = jnp.pad(qg, ((0, 0), (0, pad), (0, 0), (0, 0), (0, 0)))
+        q_pos = jnp.pad(q_pos, ((0, 0), (0, pad)))
+        out = attention(
+            qg.reshape(b, sq + pad, h, dh), k, v, q_pos, k_pos, chunk
+        )
+        return out[:, :sq]
+    nchunks = sq // chunk
+    qc = qg.reshape(b, nchunks, chunk, hkv, g, dh)
+    pc = q_pos.reshape(b, nchunks, chunk)
+
+    def body(args):
+        qi, pi = args
+        return _attend_chunk(qi, k, v, pi, k_pos, scale)
+
+    out = jax.lax.map(
+        body,
+        (jnp.moveaxis(qc, 1, 0), jnp.moveaxis(pc, 1, 0)),
+    )  # [nchunks, B, chunk, hkv, g, dh]
+    out = jnp.moveaxis(out, 0, 1).reshape(b, sq, h, dh)
+    return out
+
+
+def attention_block(
+    p: dict,
+    x: jax.Array,            # [B, S, D]
+    positions: jax.Array,    # [B, S]
+    cfg,
+    *,
+    kv_cache=None,           # dict(k=[B,T,Hkv,dh], v=..., pos=[B,T]) or None
+    cache_index=None,        # scalar write offset when updating the cache
+    chunk: int = 1024,
+):
+    """Full attention sub-block: norm -> qkv -> rope -> attend -> out.
+
+    Returns (residual_delta, updated_cache_or_None).
+    """
+    b, s, d = x.shape
+    h, hkv, dh = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    xn = rms_norm(x, p["ln"], cfg.norm_eps)
+    q = apply_linear(p["wq"], xn)
+    k = apply_linear(p["wk"], xn)
+    v = apply_linear(p["wv"], xn)
+    if cfg.qkv_bias:
+        q = q + p["bq"]
+        k = k + p["bk"]
+        v = v + p["bv"]
+    q = q.reshape(b, s, h, dh)
+    k = k.reshape(b, s, hkv, dh)
+    v = v.reshape(b, s, hkv, dh)
+    if cfg.qk_norm:
+        q = rms_norm(q, p["q_norm"], cfg.norm_eps)
+        k = rms_norm(k, p["k_norm"], cfg.norm_eps)
+    sin, cos = rope_tables(positions, dh, cfg.rope_theta)
+    q = apply_rope(q, sin, cos)
+    k = apply_rope(k, sin, cos)
+
+    new_cache = None
+    if kv_cache is not None:
+        quantized_kv = kv_cache["k"].dtype == jnp.int8
+
+        def _quant(t):
+            """int8 cache write: per-(token, kv-head) symmetric scale —
+            the paper's packing trick applied to the KV cache."""
+            tf = t.astype(jnp.float32)
+            amax = jnp.max(jnp.abs(tf), axis=-1)
+            scale = jnp.maximum(amax, 1e-6) / 127.0
+            qv = jnp.clip(
+                jnp.round(tf / scale[..., None]), -127, 127
+            ).astype(jnp.int8)
+            return qv, scale
+
+        if quantized_kv:
+            kq, ks = _quant(k)
+            vq, vs = _quant(v)
+            ck = jax.lax.dynamic_update_slice(
+                kv_cache["k"], kq, (0, cache_index, 0, 0))
+            cv = jax.lax.dynamic_update_slice(
+                kv_cache["v"], vq, (0, cache_index, 0, 0))
+            cks = jax.lax.dynamic_update_slice(
+                kv_cache["k_scale"], ks, (0, cache_index, 0))
+            cvs = jax.lax.dynamic_update_slice(
+                kv_cache["v_scale"], vs, (0, cache_index, 0))
+            cpos = jax.lax.dynamic_update_slice(
+                kv_cache["pos"], positions.astype(jnp.int32),
+                (0, cache_index))
+            new_cache = {"k": ck, "v": cv, "k_scale": cks, "v_scale": cvs,
+                         "pos": cpos}
+            k_full = (ck.astype(jnp.float32)
+                      * cks[..., None]).astype(q.dtype)
+            v_full = (cv.astype(jnp.float32)
+                      * cvs[..., None]).astype(q.dtype)
+            att = attention(q, k_full, v_full, positions, cpos, chunk=chunk)
+        else:
+            ck = jax.lax.dynamic_update_slice(
+                kv_cache["k"], k.astype(kv_cache["k"].dtype),
+                (0, cache_index, 0, 0))
+            cv = jax.lax.dynamic_update_slice(
+                kv_cache["v"], v.astype(kv_cache["v"].dtype),
+                (0, cache_index, 0, 0))
+            cpos = jax.lax.dynamic_update_slice(
+                kv_cache["pos"], positions.astype(jnp.int32),
+                (0, cache_index))
+            new_cache = {"k": ck, "v": cv, "pos": cpos}
+            att = attention(q, ck.astype(q.dtype), cv.astype(q.dtype),
+                            positions, cpos, chunk=chunk)
+    else:
+        att = attention(q, k, v, positions, positions, chunk=chunk)
+
+    out = apply_linear(p["wo"], att.reshape(b, s, h * dh))
+    return out, new_cache
+
+
+# ---------------------------------------------------------------------------
+# MLPs
+# ---------------------------------------------------------------------------
+
+def mlp_block(p: dict, x: jax.Array, cfg) -> jax.Array:
+    xn = rms_norm(x, p["ln"], cfg.norm_eps)
+    if cfg.activation == "swiglu":
+        gate = apply_linear(p["wg"], xn)
+        up = apply_linear(p["wu"], xn)
+        h = jax.nn.silu(gate.astype(jnp.float32)).astype(x.dtype) * up
+    elif cfg.activation == "sq_relu":
+        up = apply_linear(p["wu"], xn)
+        r = jax.nn.relu(up)
+        h = r * r
+    elif cfg.activation == "gelu":
+        up = apply_linear(p["wu"], xn)
+        h = jax.nn.gelu(up.astype(jnp.float32)).astype(x.dtype)
+    else:
+        raise ValueError(cfg.activation)
+    return apply_linear(p["wd"], h)
+
+
+# ---------------------------------------------------------------------------
+# MoE (grouped capacity-based dispatch)
+# ---------------------------------------------------------------------------
+
+def moe_capacity(group_tokens: int, n_experts: int, top_k: int,
+                 capacity_factor: float) -> int:
+    c = int(group_tokens * top_k * capacity_factor / n_experts)
+    return max(c, 1)
+
+
+def moe_block(p: dict, x: jax.Array, cfg, *, group_tokens: int = 2048):
+    """Top-k routed experts with per-group capacity (GShard-style).
+
+    x: [B, S, D]. Groups are contiguous token spans of ``group_tokens`` so
+    the dispatch one-hots stay small and shard cleanly along batch.
+    Returns (out [B,S,D], aux_loss scalar).
+    """
+    b, s, d = x.shape
+    e, k = cfg.n_experts, cfg.top_k
+    gt = min(group_tokens, s)
+    assert s % gt == 0, (s, gt)
+    ng = b * (s // gt)
+    xn = rms_norm(x, p["ln"], cfg.norm_eps)
+    xg = xn.reshape(ng, gt, d)
+
+    router_logits = jnp.einsum(
+        "gtd,de->gte", xg.astype(jnp.float32), p["router"].astype(jnp.float32)
+    )
+    probs = jax.nn.softmax(router_logits, axis=-1)
+    gate_vals, gate_idx = jax.lax.top_k(probs, k)  # [ng, gt, k]
+    gate_vals = gate_vals / jnp.clip(
+        jnp.sum(gate_vals, axis=-1, keepdims=True), 1e-9
+    )
+
+    # load-balance auxiliary loss (Switch-style)
+    me = jnp.mean(probs, axis=1)                                   # [ng, e]
+    ce = jnp.mean(
+        jax.nn.one_hot(gate_idx[..., 0], e, dtype=jnp.float32), axis=1
+    )
+    aux = jnp.mean(me * ce) * (e * e)
+
+    cap = moe_capacity(gt, e, k, cfg.capacity_factor)
+    # position of each token within its expert, k-slot priority order
+    dispatch = jnp.zeros((ng, gt, e, cap), jnp.bfloat16)
+    combine = jnp.zeros((ng, gt, e, cap), jnp.float32)
+    counts = jnp.zeros((ng, e), jnp.int32)
+    for slot in range(k):
+        mask = jax.nn.one_hot(gate_idx[..., slot], e, dtype=jnp.int32)  # [ng,gt,e]
+        pos = jnp.cumsum(mask, axis=1) - 1 + counts[:, None, :]
+        counts = counts + jnp.sum(mask, axis=1)
+        keep = (pos < cap) & (mask > 0)
+        pos_oh = jax.nn.one_hot(jnp.where(keep, pos, cap), cap + 1,
+                                dtype=jnp.bfloat16)[..., :cap]      # [ng,gt,e,cap]
+        sel = pos_oh * mask[..., None].astype(jnp.bfloat16)
+        dispatch = dispatch + sel
+        combine = combine + sel.astype(jnp.float32) * gate_vals[
+            ..., slot
+        ][..., None, None]
+
+    xin = jnp.einsum("gtec,gtd->gecd", dispatch, xg.astype(jnp.bfloat16))
+    h1 = jnp.einsum("gecd,edf->gecf", xin, materialize(p["w_up"]))
+    if cfg.activation == "swiglu":
+        hg = jnp.einsum("gecd,edf->gecf", xin, materialize(p["w_gate"]))
+        h = jax.nn.silu(hg.astype(jnp.float32)).astype(jnp.bfloat16) * h1
+    else:
+        h = jax.nn.silu(h1.astype(jnp.float32)).astype(jnp.bfloat16)
+    y = jnp.einsum("gecf,efd->gecd", h, materialize(p["w_down"]))
+    out = jnp.einsum("gtec,gecd->gtd", combine.astype(jnp.bfloat16), y)
+    out = out.reshape(b, s, d).astype(x.dtype)
+
+    if cfg.dense_residual:
+        out = out + mlp_block(p["dense"], x, cfg)
+    return out, aux

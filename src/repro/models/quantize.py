@@ -1,0 +1,77 @@
+"""Deploy-time SAMD packing of a trained parameter tree (paper §7 flow:
+train in full precision -> freeze -> analyse -> pack tight)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models.layers import QuantizedTensor
+from repro.models.spec import TensorSpec
+from repro.quant.config import QuantConfig
+from repro.quant.packing import pack_weights
+
+# don't bother packing tiny tensors (norms, biases, loras)
+_MIN_QUANT_SIZE = 1 << 16
+
+
+def quantize_params(params, template, qcfg: QuantConfig):
+    """Replace every quantizable leaf with a SAMD-packed QuantizedTensor.
+
+    ``template`` is the TensorSpec tree from build_template; a leaf is
+    packed iff its spec declares a ``quant_axis`` and it is large enough to
+    matter. Embeddings follow ``qcfg.quantize_embeddings``.
+    """
+    if not qcfg.enabled:
+        return params
+
+    def visit(spec, w):
+        if not isinstance(spec, TensorSpec) or spec.quant_axis is None:
+            return w
+        if int(np.prod(spec.shape)) < _MIN_QUANT_SIZE:
+            return w
+        if "vocab" in (spec.axes or ()) and not qcfg.quantize_embeddings:
+            return w
+        axis = spec.quant_axis
+        k = spec.shape[axis]
+        w2d = jnp.moveaxis(w, axis, 0).reshape(k, -1).astype(jnp.float32)
+        packed, scale = pack_weights(w2d, qcfg)
+        return QuantizedTensor(packed, scale, tuple(spec.shape), axis, qcfg)
+
+    return jax.tree.map(
+        visit, template, params,
+        is_leaf=lambda x: isinstance(x, TensorSpec),
+    )
+
+
+def quantized_spec_tree(template, qcfg: QuantConfig):
+    """ShapeDtypeStruct tree of the *quantized* params (for dry-run lowering
+    without materializing anything)."""
+    from repro.quant.packing import packed_shape
+
+    def visit(spec):
+        if (
+            not isinstance(spec, TensorSpec)
+            or spec.quant_axis is None
+            or not qcfg.enabled
+            or int(np.prod(spec.shape)) < _MIN_QUANT_SIZE
+            or ("vocab" in (spec.axes or ()) and not qcfg.quantize_embeddings)
+        ):
+            if isinstance(spec, TensorSpec):
+                return jax.ShapeDtypeStruct(spec.shape, spec.dtype)
+            return spec
+        axis = spec.quant_axis
+        k = spec.shape[axis]
+        rest = int(np.prod(spec.shape)) // k
+        pshape = packed_shape((k, rest), qcfg)
+        n_groups = 1 if qcfg.group_size is None else k // qcfg.group_size
+        sshape = (n_groups, rest)
+        return QuantizedTensor(
+            jax.ShapeDtypeStruct(pshape, jnp.uint32),
+            jax.ShapeDtypeStruct(sshape, jnp.float32),
+            tuple(spec.shape), axis, qcfg,
+        )
+
+    return jax.tree.map(
+        visit, template, is_leaf=lambda x: isinstance(x, TensorSpec)
+    )

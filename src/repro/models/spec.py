@@ -1,0 +1,78 @@
+"""Parameter templates: shapes, dtypes and logical sharding axes in one
+place, so init / sharding-spec / quantization can never drift apart.
+
+A model is described by a pytree of :class:`TensorSpec`. ``init_from_spec``
+materializes random params, ``pspecs_from_spec`` produces the PartitionSpec
+tree (via the logical-axis rules in ``repro.distributed.sharding``), and
+``quantize_tree`` swaps quantizable leaves for packed SAMD tensors.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@dataclasses.dataclass(frozen=True)
+class TensorSpec:
+    """shape + dtype + logical axis names (+ quantization eligibility).
+
+    ``axes`` has one logical name (or None) per dimension. Names used:
+      'vocab', 'embed', 'heads', 'kv_heads', 'head_dim', 'ff', 'experts',
+      'ssm_inner', 'ssm_state', 'lora', None (replicated dim).
+    ``quant_axis``: reduction axis index if this is a matmul weight that the
+    SAMD backend may quantize+pack; None = never quantized.
+    """
+
+    shape: tuple[int, ...]
+    axes: tuple[Optional[str], ...]
+    dtype: jnp.dtype = jnp.bfloat16
+    init: str = "normal"  # 'normal' | 'zeros' | 'ones' | 'decay'
+    init_scale: float = 0.02
+    quant_axis: Optional[int] = None
+
+    def __post_init__(self):
+        assert len(self.shape) == len(self.axes), (self.shape, self.axes)
+
+
+def init_from_spec(spec_tree, key: jax.Array):
+    """Materialize random parameters from a TensorSpec tree."""
+    leaves, treedef = jax.tree.flatten(
+        spec_tree, is_leaf=lambda x: isinstance(x, TensorSpec)
+    )
+    keys = jax.random.split(key, len(leaves))
+    outs = []
+    for sp, k in zip(leaves, keys):
+        if sp.init == "zeros":
+            outs.append(jnp.zeros(sp.shape, sp.dtype))
+        elif sp.init == "ones":
+            outs.append(jnp.ones(sp.shape, sp.dtype))
+        elif sp.init == "decay":
+            # slow-decay initialization for SSM/RWKV gates
+            v = jnp.linspace(-6.0, -1.0, int(np.prod(sp.shape)))
+            outs.append(v.reshape(sp.shape).astype(sp.dtype))
+        else:
+            outs.append(
+                (jax.random.normal(k, sp.shape, jnp.float32) * sp.init_scale)
+                .astype(sp.dtype)
+            )
+    return jax.tree.unflatten(treedef, outs)
+
+
+def shape_dtype_from_spec(spec_tree):
+    """ShapeDtypeStruct tree (for .lower() without allocation)."""
+    return jax.tree.map(
+        lambda sp: jax.ShapeDtypeStruct(sp.shape, sp.dtype),
+        spec_tree,
+        is_leaf=lambda x: isinstance(x, TensorSpec),
+    )
+
+
+def param_count(spec_tree) -> int:
+    leaves = jax.tree.leaves(
+        spec_tree, is_leaf=lambda x: isinstance(x, TensorSpec)
+    )
+    return sum(int(np.prod(sp.shape)) for sp in leaves)

@@ -1,0 +1,301 @@
+"""Recurrent token mixers: Mamba2 (SSD) and RWKV6 (Finch).
+
+Train/prefill use the CHUNKED parallel form (the standard accelerator
+formulation): time is split into chunks; within a chunk the recurrence is
+evaluated as dense matmuls against a lower-triangular decay matrix (MXU
+work), and a short ``lax.scan`` carries the state across chunks. This keeps
+compile time O(layers) instead of O(layers * seq_len) and converts the
+sequential VPU recurrence into MXU matmuls — the TPU-native schedule.
+
+Numerical safety: every exponent is a *difference of cumulative log-decays
+with the later index first*, hence <= 0, so no intermediate can overflow.
+
+Decode (t == 1) uses the O(1) single-step update.
+
+State layouts (per layer):
+  mamba2: {"conv": [B, conv_dim, K-1], "ssd": [B, H, hd, N]}
+  rwkv6:  {"wkv": [B, H, dk, dv], "shift_tm": [B, D], "shift_cm": [B, D]}
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import apply_linear, rms_norm
+
+
+# ---------------------------------------------------------------------------
+# Mamba2 (SSD with scalar-per-head decay)
+# ---------------------------------------------------------------------------
+
+def mamba2_dims(cfg):
+    d_inner = cfg.ssm_expand * cfg.d_model
+    n_heads = d_inner // cfg.ssm_head_dim
+    conv_dim = d_inner + 2 * cfg.ssm_state
+    return d_inner, n_heads, conv_dim
+
+
+def _causal_conv1d(x: jax.Array, w: jax.Array, prev: jax.Array | None):
+    """Depthwise causal conv. x [B,T,C], w [C,K], prev [B,C,K-1] or None.
+
+    Returns (y [B,T,C], new_prev [B,C,K-1]).
+    """
+    b, t, c = x.shape
+    k = w.shape[-1]
+    xt = jnp.moveaxis(x, 1, 2)  # [B, C, T]
+    if prev is None:
+        prev = jnp.zeros((b, c, k - 1), x.dtype)
+    xp = jnp.concatenate([prev, xt], axis=-1)  # [B, C, T+K-1]
+    y = jnp.zeros((b, c, t), jnp.float32)
+    for i in range(k):
+        y = y + xp[:, :, i : i + t].astype(jnp.float32) * w[:, i][None, :, None].astype(jnp.float32)
+    new_prev = xp[:, :, t:]
+    return jnp.moveaxis(y.astype(x.dtype), 1, 2), new_prev
+
+
+def ssd_chunked(xdt, bmat, cmat, loga, s0, chunk: int = 128):
+    """Chunked SSD scan (scalar-per-head decay).
+
+    xdt [B,T,H,P] (dt-premultiplied inputs), bmat/cmat [B,T,N],
+    loga [B,T,H] (log decay, <= 0), s0 [B,H,P,N] f32.
+    Returns (ys [B,T,H,P], s_final).
+    """
+    b, t, h, pd = xdt.shape
+    n = bmat.shape[-1]
+    c = min(chunk, t)
+    assert t % c == 0, (t, c)
+    nc = t // c
+
+    def body(s, inp):
+        xc, bc, cc, lc = inp                    # [B,C,...]
+        big_l = jnp.cumsum(lc, axis=1)          # [B,C,H] inclusive
+        cb = jnp.einsum("btn,bun->btu", cc, bc)  # [B,C,C]
+        diff = big_l[:, :, None, :] - big_l[:, None, :, :]   # [B,t,u,H] <=0 for u<=t
+        tri = jnp.tril(jnp.ones((c, c), bool))
+        dec = jnp.exp(jnp.where(tri[None, :, :, None], diff, -jnp.inf))
+        scores = cb[:, :, :, None] * dec                      # [B,t,u,H]
+        y_intra = jnp.einsum("btuh,buhp->bthp", scores, xc)
+        y_inter = jnp.einsum("btn,bhpn->bthp", cc, s) * jnp.exp(big_l)[..., None]
+        l_tot = big_l[:, -1]                                  # [B,H]
+        k_hat = jnp.exp(l_tot[:, None] - big_l)               # [B,C,H] <=0 exps
+        s_new = s * jnp.exp(l_tot)[:, :, None, None] + jnp.einsum(
+            "buhp,bun,buh->bhpn", xc, bc, k_hat
+        )
+        return s_new, y_intra + y_inter
+
+    args = (
+        jnp.moveaxis(xdt.reshape(b, nc, c, h, pd), 1, 0),
+        jnp.moveaxis(bmat.reshape(b, nc, c, n), 1, 0),
+        jnp.moveaxis(cmat.reshape(b, nc, c, n), 1, 0),
+        jnp.moveaxis(loga.reshape(b, nc, c, h), 1, 0),
+    )
+    # remat the chunk body: backward recomputes the cheap intra-chunk
+    # matmuls instead of saving the [B,C,C,H] score tensors per chunk
+    s1, ys = jax.lax.scan(jax.checkpoint(body), s0, args)
+    return jnp.moveaxis(ys, 0, 1).reshape(b, t, h, pd), s1
+
+
+def mamba2_block(p: dict, x: jax.Array, cfg, state: dict | None = None):
+    """Mamba2 mixer. x [B,T,D] -> (y [B,T,D], new_state)."""
+    b, t, d = x.shape
+    d_inner, n_heads, conv_dim = mamba2_dims(cfg)
+    hd, n = cfg.ssm_head_dim, cfg.ssm_state
+
+    xn = rms_norm(x, p["ln"], cfg.norm_eps)
+    zxbcdt = apply_linear(p["in_proj"], xn)
+    z, xbc, dt = jnp.split(
+        zxbcdt, [d_inner, d_inner + conv_dim], axis=-1
+    )
+    prev = state["conv"] if state is not None else None
+    xbc, new_conv = _causal_conv1d(xbc, p["conv_w"], prev)
+    xbc = jax.nn.silu(xbc.astype(jnp.float32)).astype(x.dtype)
+    xs, bmat, cmat = jnp.split(xbc, [d_inner, d_inner + n], axis=-1)
+
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"].astype(jnp.float32))
+    a = -jnp.exp(p["a_log"].astype(jnp.float32))            # [H]
+    loga = dt * a                                            # [B,T,H] <= 0
+
+    xh = xs.reshape(b, t, n_heads, hd).astype(jnp.float32)
+    bmat = bmat.astype(jnp.float32)                          # [B,T,N]
+    cmat = cmat.astype(jnp.float32)
+    xdt = xh * dt[..., None]
+
+    s0 = (
+        state["ssd"].astype(jnp.float32)
+        if state is not None
+        else jnp.zeros((b, n_heads, hd, n), jnp.float32)
+    )
+    if t == 1:
+        upd = jnp.einsum("bhp,bn->bhpn", xdt[:, 0], bmat[:, 0])
+        s1 = s0 * jnp.exp(loga[:, 0])[..., None, None] + upd
+        ys = jnp.einsum("bhpn,bn->bhp", s1, cmat[:, 0])[:, None]
+    else:
+        pad = (-t) % 128
+        if pad:
+            padf = lambda a: jnp.pad(a, [(0, 0), (0, pad)] + [(0, 0)] * (a.ndim - 2))
+            ys, s1 = ssd_chunked(
+                padf(xdt), padf(bmat), padf(cmat), padf(loga), s0
+            )
+            ys = ys[:, :t]
+        else:
+            ys, s1 = ssd_chunked(xdt, bmat, cmat, loga, s0)
+
+    ys = ys + xh * p["d_skip"].astype(jnp.float32)[None, None, :, None]
+    y = ys.reshape(b, t, d_inner).astype(x.dtype)
+    y = y * jax.nn.silu(z.astype(jnp.float32)).astype(x.dtype)
+    y = rms_norm(y, p["out_norm"], cfg.norm_eps)
+    out = apply_linear(p["out_proj"], y)
+    new_state = {"conv": new_conv, "ssd": s1.astype(jnp.float32)}
+    return out, new_state
+
+
+# ---------------------------------------------------------------------------
+# RWKV6 (Finch): data-dependent decay + token-shift ddlerp
+# ---------------------------------------------------------------------------
+
+def rwkv6_dims(cfg):
+    n_heads = cfg.d_model // cfg.rwkv_head_dim
+    return n_heads, cfg.rwkv_head_dim
+
+
+def _ddlerp(x, xprev, mu, lora_a, lora_b):
+    """RWKV6 data-dependent lerp: x + (xprev - x) * (mu + lora(xx))."""
+    diff = xprev - x
+    xx = x + diff * mu
+    adj = jnp.tanh(jnp.einsum("btd,dr->btr", xx.astype(jnp.float32),
+                              lora_a.astype(jnp.float32)))
+    adj = jnp.einsum("btr,rd->btd", adj, lora_b.astype(jnp.float32))
+    return x + diff * (mu + adj.astype(x.dtype))
+
+
+def wkv6_chunked(r, k, v, logw, u, s0, chunk: int = 32):
+    """Chunked WKV6 scan (per-channel decay, current-token bonus).
+
+    r/k/v [B,T,H,K|V], logw [B,T,H,K] (<= 0), u [H,K] bonus, s0 [B,H,K,V].
+    Recurrence: y_t = r_t·(S_{t-1} + D(u) k_t v_t^T); S_t = D(w_t) S_{t-1}
+    + k_t v_t^T. Intra-chunk decays are computed as exp(differences of
+    cumulative log decays), all <= 0, so nothing overflows.
+    Returns (ys [B,T,H,V], s_final).
+    """
+    b, t, h, dk = r.shape
+    dv = v.shape[-1]
+    c = min(chunk, t)
+    pad = (-t) % c
+    if pad:  # logw=0 padding is state-neutral (decay 1, zero k/v/r)
+        pf = lambda a: jnp.pad(a, [(0, 0), (0, pad), (0, 0), (0, 0)])
+        r, k, v, logw = pf(r), pf(k), pf(v), pf(logw)
+    tt = t + pad
+    nc = tt // c
+
+    def body(s, inp):
+        rc, kc, vc, lc = inp                     # [B,C,H,*]
+        big_l = jnp.cumsum(lc, axis=1)           # [B,C,H,K] inclusive
+        l_prev = big_l - lc                      # exclusive (L_{t-1})
+        # intra (u < t): sum_d r_t[d] k_u[d] exp(Lprev_t[d] - L_u[d])
+        diff = l_prev[:, :, None] - big_l[:, None, :, :]     # [B,t,u,H,K]
+        tri = jnp.tril(jnp.ones((c, c), bool), k=-1)
+        dec = jnp.exp(jnp.where(tri[None, :, :, None, None], diff, -jnp.inf))
+        rk = jnp.einsum("bthk,buhk,btuhk->btuh", rc, kc, dec)
+        y = jnp.einsum("btuh,buhv->bthv", rk, vc)
+        # bonus (u == t)
+        y = y + jnp.einsum("bthk,hk,bthk,bthv->bthv", rc, u, kc, vc)
+        # inter-chunk: r_t decayed from chunk start against carried state
+        y = y + jnp.einsum("bthk,bhkv->bthv", rc * jnp.exp(l_prev), s)
+        # carry state to chunk end
+        l_tot = big_l[:, -1]                     # [B,H,K]
+        k_hat = kc * jnp.exp(l_tot[:, None] - big_l)
+        s_new = s * jnp.exp(l_tot)[..., None] + jnp.einsum(
+            "bthk,bthv->bhkv", k_hat, vc
+        )
+        return s_new, y
+
+    args = tuple(
+        jnp.moveaxis(a.reshape(b, nc, c, h, -1), 1, 0)
+        for a in (r, k, v, logw)
+    )
+    s1, ys = jax.lax.scan(jax.checkpoint(body), s0, args)
+    ys = jnp.moveaxis(ys, 0, 1).reshape(b, tt, h, dv)
+    return ys[:, :t], s1
+
+
+def rwkv6_time_mix(p: dict, x: jax.Array, cfg, state: dict | None = None):
+    """RWKV6 time-mixing. x [B,T,D] -> (y, {"wkv", "shift_tm"})."""
+    b, t, d = x.shape
+    h, hd = rwkv6_dims(cfg)
+
+    xn = rms_norm(x, p["ln"], cfg.norm_eps)
+    if state is not None:
+        first = state["shift_tm"][:, None, :].astype(xn.dtype)
+    else:
+        first = jnp.zeros((b, 1, d), xn.dtype)
+    xprev = jnp.concatenate([first, xn[:, :-1]], axis=1)
+
+    xr = _ddlerp(xn, xprev, p["mu_r"], p["lora_r_a"], p["lora_r_b"])
+    xk = _ddlerp(xn, xprev, p["mu_k"], p["lora_k_a"], p["lora_k_b"])
+    xv = _ddlerp(xn, xprev, p["mu_v"], p["lora_v_a"], p["lora_v_b"])
+    xw = _ddlerp(xn, xprev, p["mu_w"], p["lora_w_a"], p["lora_w_b"])
+    xg = _ddlerp(xn, xprev, p["mu_g"], p["lora_g_a"], p["lora_g_b"])
+
+    r = apply_linear(p["wr"], xr).reshape(b, t, h, hd)
+    k = apply_linear(p["wk"], xk).reshape(b, t, h, hd)
+    v = apply_linear(p["wv"], xv).reshape(b, t, h, hd)
+    g = apply_linear(p["wg"], xg)
+
+    # data-dependent decay (low-rank)
+    wlo = jnp.tanh(jnp.einsum("btd,dr->btr", xw.astype(jnp.float32),
+                              p["w_lora_a"].astype(jnp.float32)))
+    wlo = jnp.einsum("btr,rd->btd", wlo, p["w_lora_b"].astype(jnp.float32))
+    decay = jnp.exp(
+        -jnp.exp(p["w0"].astype(jnp.float32)[None, None] + wlo)
+    ).reshape(b, t, h, hd)                                   # in (0,1)
+
+    u = p["u_bonus"].astype(jnp.float32)                     # [H, hd]
+    rf = r.astype(jnp.float32)
+    kf = k.astype(jnp.float32)
+    vf = v.astype(jnp.float32)
+
+    s0 = (
+        state["wkv"].astype(jnp.float32)
+        if state is not None
+        else jnp.zeros((b, h, hd, hd), jnp.float32)
+    )
+    if t == 1:
+        r1, k1, v1, w1 = (a.reshape(b, h, hd) for a in
+                          (rf[:, 0], kf[:, 0], vf[:, 0], decay[:, 0]))
+        kv = jnp.einsum("bhk,bhv->bhkv", k1, v1)
+        y = jnp.einsum("bhk,bhkv->bhv", r1, s0 + u[None, :, :, None] * kv)
+        s1 = s0 * w1[..., None] + kv
+        ys = y[:, None]
+    else:
+        logw = jnp.log(jnp.maximum(decay.astype(jnp.float32), 1e-30))
+        ys, s1 = wkv6_chunked(rf, kf, vf, logw, u, s0)
+
+    # per-head group norm, then silu(g) gate
+    yn = rms_norm(ys.reshape(b, t, h, hd), p["gn"], cfg.norm_eps)
+    yn = yn.reshape(b, t, d).astype(x.dtype)
+    yn = yn * jax.nn.silu(g.astype(jnp.float32)).astype(x.dtype)
+    out = apply_linear(p["wo"], yn)
+    new_state = {"wkv": s1, "shift_tm": xn[:, -1].astype(jnp.float32)}
+    return out, new_state
+
+
+def rwkv6_channel_mix(p: dict, x: jax.Array, cfg, state: dict | None = None):
+    """RWKV6 channel-mixing FFN with token shift."""
+    b, t, d = x.shape
+    xn = rms_norm(x, p["ln"], cfg.norm_eps)
+    if state is not None:
+        first = state["shift_cm"][:, None, :].astype(xn.dtype)
+    else:
+        first = jnp.zeros((b, 1, d), xn.dtype)
+    xprev = jnp.concatenate([first, xn[:, :-1]], axis=1)
+    xk = xn + (xprev - xn) * p["mu_ck"]
+    xr = xn + (xprev - xn) * p["mu_cr"]
+    kk = apply_linear(p["wk_c"], xk)
+    kk = jnp.square(jax.nn.relu(kk.astype(jnp.float32))).astype(x.dtype)
+    kv = apply_linear(p["wv_c"], kk)
+    gate = jax.nn.sigmoid(
+        apply_linear(p["wr_c"], xr).astype(jnp.float32)
+    ).astype(x.dtype)
+    out = gate * kv
+    new_state = {"shift_cm": xn[:, -1].astype(jnp.float32)}
+    return out, new_state

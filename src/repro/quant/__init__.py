@@ -1,0 +1,23 @@
+"""Quantization substrate: calibration, fake-quant (QAT), SAMD packing.
+
+SAMD (the paper's technique) is the storage + arithmetic backend: quantized
+weights live in HBM as SAMD-packed uint32 words and are unpacked/dequantized
+on the fly (XLA path) or inside a Pallas kernel (TPU path).
+"""
+from repro.quant.config import QuantConfig
+from repro.quant.quantizer import (
+    dequantize,
+    fake_quant,
+    quantize_symmetric,
+)
+from repro.quant.packing import (
+    pack_weights,
+    packed_shape,
+    qmatmul,
+    unpack_weights,
+)
+
+__all__ = [
+    "QuantConfig", "dequantize", "fake_quant", "quantize_symmetric",
+    "pack_weights", "packed_shape", "qmatmul", "unpack_weights",
+]

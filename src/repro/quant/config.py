@@ -1,0 +1,52 @@
+"""Quantization configuration."""
+from __future__ import annotations
+
+import dataclasses
+from typing import Literal, Optional
+
+
+@dataclasses.dataclass(frozen=True)
+class QuantConfig:
+    """Per-model quantization policy.
+
+    bits:        weight precision (paper sweeps 8 -> 2).
+    enabled:     master switch; False = bf16 weights everywhere.
+    backend:     'xla'    — unpack+dequant as XLA ops (robust everywhere,
+                            used by the multi-pod dry-run),
+                 'pallas' — fused unpack->MXU kernel (TPU target; validated
+                            in interpret mode on CPU).
+    spacer:      'permanent' keeps one guard bit per lane (cheap ops,
+                 32/(b+1) values/word); 'temporary' packs dense
+                 (32/b values/word, pricier ops). Matches the paper's two
+                 evaluation regimes.
+    group_size:  scale granularity along the reduction axis; None = one
+                 scale per output channel.
+    quantize_embeddings: embeddings/LM head stay bf16 by default.
+    """
+
+    bits: int = 4
+    enabled: bool = True
+    backend: Literal["xla", "pallas"] = "xla"
+    spacer: Literal["permanent", "temporary"] = "temporary"
+    group_size: Optional[int] = None
+    quantize_embeddings: bool = False
+    act_bits: Optional[int] = None  # activation fake-quant (QAT); None = off
+    # KV-cache quantization (beyond-paper: the paper's storage trick
+    # applied to the decode-dominant KV cache): 8 = int8 lanes with a
+    # per-(token, kv-head) scale; None = bf16 cache.
+    kv_bits: Optional[int] = None
+
+    @property
+    def lane_width(self) -> int:
+        return self.bits + (1 if self.spacer == "permanent" else 0)
+
+    @property
+    def values_per_word(self) -> int:
+        return 32 // self.lane_width
+
+    def __post_init__(self):
+        if not (1 <= self.bits <= 16):
+            raise ValueError(f"bits out of range: {self.bits}")
+
+
+BF16 = QuantConfig(enabled=False)

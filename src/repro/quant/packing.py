@@ -1,0 +1,74 @@
+"""SAMD packing of quantized weights + the quantized matmul entry point.
+
+Layout: a weight W[K, N] quantized to b bits is stored as uint32 words of
+``values_per_word`` lanes packed along the *reduction* axis K:
+
+    packed[K // vpw, N]  uint32,   scale[1 or K//group, N]  float32
+
+so a (bk, bn) kernel block unpacks to (bk * vpw, bn) weight values with
+contiguous lane extraction — the layout the Pallas kernel wants, and the
+layout that minimizes HBM traffic at decode time (the paper's central
+claim, re-targeted at the TPU memory hierarchy).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import samd
+from repro.quant.config import QuantConfig
+from repro.quant.quantizer import quantize_symmetric
+
+
+def _fmt(cfg: QuantConfig) -> samd.SAMDFormat:
+    return samd.SAMDFormat(cfg.bits, cfg.lane_width, signed=True, word_bits=32)
+
+
+def packed_shape(shape: tuple[int, ...], cfg: QuantConfig) -> tuple[int, ...]:
+    k = shape[0]
+    vpw = cfg.values_per_word
+    return (-(-k // vpw),) + tuple(shape[1:])
+
+
+def pack_weights(w: jax.Array, cfg: QuantConfig):
+    """Quantize + SAMD-pack a [K, ...] weight along axis 0.
+
+    Returns (packed uint32 [ceil(K/vpw), ...], scale f32).
+    """
+    q, scale = quantize_symmetric(w, cfg.bits, axis=0, group_size=cfg.group_size)
+    fmt = _fmt(cfg)
+    # move K last, pack it, move back
+    qt = jnp.moveaxis(q, 0, -1)
+    words = samd.pack(qt, fmt)
+    packed = jnp.moveaxis(words, -1, 0)
+    return packed, scale
+
+
+def unpack_weights(packed: jax.Array, k: int, cfg: QuantConfig) -> jax.Array:
+    """Unpack to int32 [K, ...] (XLA shifts/masks — VPU-friendly on TPU)."""
+    fmt = _fmt(cfg)
+    pt = jnp.moveaxis(packed, 0, -1)
+    vals = samd.unpack(pt, fmt, k)
+    return jnp.moveaxis(vals, -1, 0)
+
+
+def dequant_weights(packed: jax.Array, scale: jax.Array, k: int,
+                    cfg: QuantConfig, dtype=jnp.bfloat16) -> jax.Array:
+    q = unpack_weights(packed, k, cfg)
+    if cfg.group_size is not None:
+        g = cfg.group_size
+        qg = q.reshape((k // g, g) + q.shape[1:])
+        w = qg.astype(jnp.float32) * scale[:, None]
+        return w.reshape(q.shape).astype(dtype)
+    return (q.astype(jnp.float32) * scale).astype(dtype)
+
+
+def qmatmul(x: jax.Array, packed: jax.Array, scale: jax.Array, k: int,
+            cfg: QuantConfig, precision=None) -> jax.Array:
+    """x[..., K] @ dequant(packed)[K, N] with backend dispatch."""
+    if cfg.backend == "pallas":
+        from repro.kernels import ops as kops
+
+        return kops.samd_matmul(x, packed, scale, k, cfg)
+    w = dequant_weights(packed, scale, k, cfg, dtype=x.dtype)
+    return jnp.matmul(x, w, precision=precision)

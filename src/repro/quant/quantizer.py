@@ -1,0 +1,64 @@
+"""Symmetric quantization + straight-through-estimator fake-quant."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def quantize_symmetric(w: jax.Array, bits: int, axis: int = 0,
+                       group_size: int | None = None):
+    """Quantize to signed ``bits`` with power-limited symmetric scaling.
+
+    Returns (q int32 in [-2^(b-1)+1, 2^(b-1)-1], scale f32). ``axis`` is the
+    reduction axis of the matmul the weight feeds (scales are constant along
+    it unless ``group_size`` splits it).
+    """
+    qmax = (1 << (bits - 1)) - 1
+    if group_size is not None:
+        k = w.shape[axis]
+        if k % group_size:
+            raise ValueError(f"group_size {group_size} !| axis len {k}")
+        shp = list(w.shape)
+        shp[axis : axis + 1] = [k // group_size, group_size]
+        wg = w.reshape(shp)
+        amax = jnp.max(jnp.abs(wg), axis=axis + 1, keepdims=True)
+        scale = jnp.maximum(amax, 1e-8) / qmax
+        q = jnp.clip(jnp.round(wg / scale), -qmax, qmax).astype(jnp.int32)
+        return q.reshape(w.shape), scale.squeeze(axis + 1).astype(jnp.float32)
+    amax = jnp.max(jnp.abs(w), axis=axis, keepdims=True)
+    scale = jnp.maximum(amax, 1e-8) / qmax
+    q = jnp.clip(jnp.round(w / scale), -qmax, qmax).astype(jnp.int32)
+    return q, scale.astype(jnp.float32)
+
+
+def dequantize(q: jax.Array, scale: jax.Array, dtype=jnp.bfloat16) -> jax.Array:
+    return (q.astype(jnp.float32) * scale).astype(dtype)
+
+
+@jax.custom_vjp
+def _ste_round(x):
+    return jnp.round(x)
+
+
+def _ste_fwd(x):
+    return jnp.round(x), None
+
+
+def _ste_bwd(_, g):
+    return (g,)
+
+
+_ste_round.defvjp(_ste_fwd, _ste_bwd)
+
+
+def fake_quant(w: jax.Array, bits: int, axis: int = 0) -> jax.Array:
+    """Quantize-dequantize with a straight-through gradient (QAT).
+
+    Used at train time so the deployed SAMD-packed network is trained for
+    its precision (paper §7: training needs precision, inference does not).
+    """
+    qmax = (1 << (bits - 1)) - 1
+    amax = jax.lax.stop_gradient(jnp.max(jnp.abs(w), axis=axis, keepdims=True))
+    scale = jnp.maximum(amax, 1e-8) / qmax
+    q = jnp.clip(_ste_round(w / scale), -qmax, qmax)
+    return q * scale

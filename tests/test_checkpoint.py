@@ -1,0 +1,96 @@
+"""Checkpointing: atomic save, restore, rolling GC, elastic reshard."""
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.checkpoint import CheckpointManager, load_checkpoint, save_checkpoint
+
+
+def _tree(seed=0):
+    k = jax.random.PRNGKey(seed)
+    return {
+        "a": jax.random.normal(k, (8, 4)),
+        "nested": {"b": jnp.arange(10, dtype=jnp.int32)},
+        "list": [jnp.ones((3,)), jnp.zeros((2, 2))],
+    }
+
+
+def test_save_load_roundtrip(tmp_path):
+    t = _tree()
+    path = os.path.join(tmp_path, "ck")
+    save_checkpoint(path, t, step=7, meta={"arch": "x"})
+    t2, step, meta = load_checkpoint(path, t)
+    assert step == 7 and meta["arch"] == "x"
+    for a, b in zip(jax.tree.leaves(t), jax.tree.leaves(t2)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_manager_rolling_and_latest(tmp_path):
+    mgr = CheckpointManager(str(tmp_path), keep=2)
+    for s in (10, 20, 30):
+        mgr.save(s, _tree(s), blocking=True)
+    assert mgr.latest().endswith("ckpt_00000030")
+    dirs = sorted(d for d in os.listdir(tmp_path) if d.startswith("ckpt"))
+    assert len(dirs) == 2  # GC kept only the last two
+
+
+def test_manager_async_then_wait(tmp_path):
+    mgr = CheckpointManager(str(tmp_path))
+    mgr.save(5, _tree(), blocking=False)
+    mgr.wait()
+    assert mgr.latest() is not None
+    restored = mgr.restore(_tree())
+    assert restored is not None
+    _, step, _ = restored
+    assert step == 5
+
+
+def test_crash_leaves_previous_checkpoint(tmp_path):
+    """A partial (tmp) write never shadows the last complete checkpoint."""
+    mgr = CheckpointManager(str(tmp_path))
+    mgr.save(1, _tree(), blocking=True)
+    # simulate a crashed writer: stray tmp dir without manifest
+    os.makedirs(os.path.join(tmp_path, "ckpt_00000002.tmp"))
+    assert mgr.latest().endswith("ckpt_00000001")
+
+
+def test_elastic_restore_resharded(tmp_path):
+    """Checkpoints hold full logical tensors -> restore works regardless of
+    the saving mesh (device_put with new shardings happens at load)."""
+    t = _tree()
+    path = os.path.join(tmp_path, "ck")
+    save_checkpoint(path, t, step=3)
+    # restore with explicit (single-device) shardings
+    shardings = jax.tree.map(
+        lambda x: jax.sharding.SingleDeviceSharding(jax.devices()[0]), t
+    )
+    t2, step, _ = load_checkpoint(path, t, shardings)
+    assert step == 3
+    for a, b in zip(jax.tree.leaves(t), jax.tree.leaves(t2)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_train_resume_equivalence(tmp_path):
+    """Stopping at step k and resuming reproduces the uninterrupted run
+    (deterministic data + checkpointed opt state)."""
+    from repro.launch.train import main as train_main
+
+    ck1 = os.path.join(tmp_path, "c1")
+    args_common = [
+        "--arch", "qwen1.5-0.5b", "--smoke", "--batch", "4",
+        "--seq-len", "32", "--log-every", "100",
+    ]
+    p_full = train_main(args_common + ["--steps", "6"])
+    train_main(args_common + ["--steps", "3", "--checkpoint-dir", ck1,
+                              "--checkpoint-every", "3"])
+    p_resumed = train_main(
+        args_common + ["--steps", "6", "--checkpoint-dir", ck1, "--resume"]
+    )
+    diffs = jax.tree.map(
+        lambda a, b: float(jnp.max(jnp.abs(a.astype(jnp.float32)
+                                           - b.astype(jnp.float32)))),
+        p_full, p_resumed,
+    )
+    assert max(jax.tree.leaves(diffs)) < 5e-2

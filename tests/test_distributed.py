@@ -1,0 +1,173 @@
+"""Distribution layer: sharding rules, mesh, compression, multi-device jit.
+
+Multi-device cases run in a subprocess with fake CPU devices, because the
+main test process must keep the default single-device view (per the
+project's dry-run isolation rule).
+"""
+import subprocess
+import sys
+import textwrap
+
+import jax
+import numpy as np
+import pytest
+from jax.sharding import PartitionSpec as P
+
+from repro.configs import SHAPES, get_arch, smoke_config
+from repro.distributed import sharding as sh
+from repro.models import build_template
+from repro.models.spec import TensorSpec
+
+
+class FakeMesh:
+    """Mesh stand-in exposing .shape (avoids touching jax device state)."""
+
+    def __init__(self, **axes):
+        self.shape = dict(axes)
+
+
+def test_logical_rules_divisibility_fallback():
+    mesh = FakeMesh(data=16, model=16)
+    # 40 heads * 128 dh = 5120 divides 16 -> fused axis sharded
+    ps = sh.logical_to_mesh(("embed", "heads"), (5120, 5120), mesh)
+    assert ps == P(("data",), "model")
+    # an indivisible model axis falls back to replication
+    ps = sh.logical_to_mesh((None, "kv_heads"), (1, 8), mesh)
+    assert ps == P(None, None)
+
+
+def test_serve_mode_drops_fsdp():
+    mesh = FakeMesh(data=16, model=16)
+    ps_train = sh.logical_to_mesh(("embed", "ff"), (4096, 16384), mesh, "train")
+    ps_serve = sh.logical_to_mesh(("embed", "ff"), (4096, 16384), mesh, "serve")
+    assert ps_train == P(("data",), "model")
+    assert ps_serve == P(None, "model")
+
+
+def test_multipod_embed_gets_pod_axis():
+    mesh = FakeMesh(pod=2, data=16, model=16)
+    ps = sh.logical_to_mesh(("embed", "ff"), (4096, 16384), mesh, "train")
+    assert ps == P(("data", "pod"), "model")
+
+
+def test_param_pspecs_cover_template():
+    mesh = FakeMesh(data=16, model=16)
+    for name in ("qwen3-14b", "arctic-480b", "rwkv6-3b", "zamba2-7b"):
+        cfg = get_arch(name)
+        tmpl = build_template(cfg)
+        ps = sh.param_pspecs(tmpl, mesh)
+        n_spec = len(jax.tree.leaves(
+            tmpl, is_leaf=lambda x: isinstance(x, TensorSpec)))
+        n_ps = len(jax.tree.leaves(ps, is_leaf=lambda x: isinstance(x, P)))
+        assert n_spec == n_ps
+
+
+def test_cache_pspecs_flash_decoding_fallback():
+    """Indivisible KV heads -> sequence axis goes on 'model'."""
+    mesh = FakeMesh(data=16, model=16)
+    cfg = get_arch("nemotron-4-15b")        # kv=8, not divisible by 16
+    ps = sh.cache_pspecs(cfg, SHAPES["decode_32k"], mesh)
+    kv_spec = ps["layers"][0]["k"]
+    assert kv_spec[1] in ("model", ("model",)) and kv_spec[2] is None
+
+    cfg2 = get_arch("olmoe-1b-7b")          # kv=16, divisible
+    ps2 = sh.cache_pspecs(cfg2, SHAPES["decode_32k"], mesh)
+    kv2 = ps2["layers"][0]["k"]
+    assert kv2[2] == "model"
+
+
+def test_long_context_batch1_seq_on_data_and_model():
+    mesh = FakeMesh(data=16, model=16)
+    cfg = get_arch("zamba2-7b")
+    ps = sh.cache_pspecs(cfg, SHAPES["long_500k"], mesh)
+    attn_layers = [l for l in ps["layers"] if "attn_kv" in l]
+    assert attn_layers, "zamba2 must have shared-attn caches"
+    # batch=1 -> sequence carries the parallelism ('data'; kv heads divide
+    # so 'model' stays on the kv axis)
+    spec = attn_layers[0]["attn_kv"]["k"]
+    assert spec[1] and "data" in spec[1]
+
+
+def test_compression_error_feedback():
+    from repro.distributed import compression as comp
+    import jax.numpy as jnp
+
+    rng = np.random.default_rng(0)
+    g = jnp.asarray(rng.normal(size=(256,)), jnp.float32)
+    r = jnp.zeros_like(g)
+    # one step loses precision; accumulated residual recovers it over steps
+    total_sent = jnp.zeros_like(g)
+    for _ in range(50):
+        q, scale, r = comp.compress_grad(g, r, bits=8)
+        total_sent = total_sent + comp.dequantize_int8(q, scale)
+    drift = float(jnp.max(jnp.abs(total_sent / 50 - g)))
+    assert drift < 1e-3, drift
+
+
+def test_compression_int4_samd_packed_roundtrip():
+    from repro.distributed import compression as comp
+    import jax.numpy as jnp
+
+    rng = np.random.default_rng(1)
+    g = jnp.asarray(rng.normal(size=(128,)), jnp.float32)
+    q, scale = comp.quantize_int4_packed(g)
+    assert q.dtype == jnp.uint32 and q.size == 128 // 8
+    back = comp.dequantize_int4_packed(q, scale, 128, (128,))
+    assert float(jnp.max(jnp.abs(back - g))) <= float(scale) * 0.51 + 1e-6
+
+
+MULTIDEV_SNIPPET = textwrap.dedent("""
+    import os
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    import jax, jax.numpy as jnp
+    import numpy as np
+    from jax.sharding import NamedSharding, PartitionSpec as P
+    from repro.configs import smoke_config, RunConfig
+    from repro.configs.base import ShapeConfig
+    from repro.distributed.sharding import param_pspecs, named
+    from repro.launch import steps as steps_mod
+    from repro.models import build_template, init_from_spec
+    from repro.optim.adamw import adamw_init
+
+    mesh = jax.make_mesh((2, 4), ("data", "model"))
+    cfg = smoke_config("qwen1.5-0.5b").scaled(d_model=64, d_ff=128, vocab=256,
+                                              n_heads=4, n_kv_heads=4,
+                                              head_dim=16)
+    tmpl = build_template(cfg)
+    params = init_from_spec(tmpl, jax.random.PRNGKey(0))
+    pspecs = param_pspecs(tmpl, mesh)
+    params = jax.device_put(params, named(pspecs, mesh))
+    opt = adamw_init(params)
+    run = RunConfig(arch=cfg, shape=ShapeConfig("t", 32, 4, "train"))
+    step = jax.jit(steps_mod.make_train_step(cfg, run))
+    batch = {
+        "tokens": jax.device_put(
+            np.random.randint(0, 256, (4, 32)).astype(np.int32),
+            NamedSharding(mesh, P("data", None))),
+        "targets": jax.device_put(
+            np.random.randint(0, 256, (4, 32)).astype(np.int32),
+            NamedSharding(mesh, P("data", None))),
+    }
+    p2, o2, m = step(params, opt, batch)
+    loss = float(m["loss"])
+    assert np.isfinite(loss), loss
+    # compare against single-logical-device run
+    step_ref = steps_mod.make_train_step(cfg, run)
+    params_host = jax.device_get(params)
+    import jax as _j
+    p2r, o2r, mr = step_ref(params_host, jax.device_get(opt),
+                            jax.device_get(batch))
+    assert abs(loss - float(mr["loss"])) < 1e-2, (loss, float(mr["loss"]))
+    print("MULTIDEV_OK", loss)
+""")
+
+
+def test_sharded_train_step_matches_unsharded():
+    """Real 8-device (fake CPU) pjit training step == single-device math."""
+    r = subprocess.run(
+        [sys.executable, "-c", MULTIDEV_SNIPPET],
+        capture_output=True, text=True, timeout=600,
+        env={"PYTHONPATH": "src", "PATH": "/usr/bin:/bin:/usr/local/bin"},
+        cwd=__file__.rsplit("/", 2)[0],
+    )
+    assert "MULTIDEV_OK" in r.stdout, r.stdout + r.stderr

@@ -1,0 +1,82 @@
+"""Pallas kernels (interpret mode) vs pure-jnp oracles: shape/dtype sweeps."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import conv as cconv
+from repro.core import overflow
+from repro.kernels import ops, ref
+from repro.quant import QuantConfig, pack_weights
+
+
+@pytest.mark.parametrize("bits", [2, 3, 4, 8])
+@pytest.mark.parametrize("shape", [(16, 128, 128), (64, 256, 384),
+                                   (8, 512, 256)])
+def test_samd_matmul_vs_ref(bits, shape):
+    m, k, n = shape
+    rng = np.random.default_rng(bits)
+    cfg = QuantConfig(bits=bits)
+    w = jnp.asarray(rng.normal(size=(k, n)), jnp.float32)
+    x = jnp.asarray(rng.normal(size=(m, k)), jnp.float32)
+    packed, scale = pack_weights(w, cfg)
+    got = ops.samd_matmul(x, packed, scale, k, cfg, interpret=True)
+    want = ref.samd_matmul_ref(x, packed, scale, k, cfg)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-5, atol=1e-4)
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_samd_matmul_dtypes(dtype):
+    rng = np.random.default_rng(0)
+    cfg = QuantConfig(bits=4)
+    k, n, m = 256, 128, 32
+    w = jnp.asarray(rng.normal(size=(k, n)), jnp.float32)
+    x = jnp.asarray(rng.normal(size=(m, k)), dtype)
+    packed, scale = pack_weights(w, cfg)
+    got = ops.samd_matmul(x, packed, scale, k, cfg, interpret=True)
+    want = ref.samd_matmul_ref(x, packed, scale, k, cfg)
+    assert got.dtype == dtype
+    np.testing.assert_allclose(
+        np.asarray(got, np.float32), np.asarray(want, np.float32),
+        rtol=2e-2, atol=2e-1,
+    )
+
+
+def test_samd_matmul_batched_lead_dims():
+    rng = np.random.default_rng(1)
+    cfg = QuantConfig(bits=4)
+    k, n = 128, 128
+    w = jnp.asarray(rng.normal(size=(k, n)), jnp.float32)
+    x = jnp.asarray(rng.normal(size=(2, 3, k)), jnp.float32)
+    packed, scale = pack_weights(w, cfg)
+    got = ops.samd_matmul(x, packed, scale, k, cfg, interpret=True)
+    assert got.shape == (2, 3, n)
+
+
+@pytest.mark.parametrize("bits", [2, 3, 4])
+@pytest.mark.parametrize("signed", [False, True])
+@pytest.mark.parametrize("n", [50, 333, 1024])
+def test_samd_conv_kernel_vs_ref(bits, signed, n):
+    rng = np.random.default_rng(n + bits)
+    plan = cconv.make_plan(bits, 3, signed)
+    lo, hi = overflow.input_range(bits, signed)
+    x = jnp.asarray(rng.integers(lo, hi + 1, size=n), jnp.int32)
+    k = jnp.asarray(rng.integers(lo, hi + 1, size=3), jnp.int32)
+    got = ops.samd_conv1d(x, k, plan, interpret=True)
+    want = np.convolve(np.asarray(x), np.asarray(k))
+    np.testing.assert_array_equal(np.asarray(got), want)
+
+
+def test_samd_conv_chunks_against_core_ref():
+    """Kernel-internal chunk products match the numpy-validated core path."""
+    rng = np.random.default_rng(9)
+    plan = cconv.make_plan(3, 3, True)
+    x = jnp.asarray(rng.integers(-4, 4, size=120), jnp.int32)
+    k = jnp.asarray(rng.integers(-4, 4, size=3), jnp.int32)
+    xw = cconv.pack_conv_operand(x, plan)
+    kw = cconv.pack_conv_kernel(k, plan)
+    from repro.kernels.samd_conv import samd_conv_chunks
+
+    got = samd_conv_chunks(xw, kw, plan, interpret=True)
+    want = ref.samd_conv_chunks_ref(xw, kw, plan)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))

@@ -1,0 +1,55 @@
+"""Constant-kernel overflow analysis (paper §7, Fig. 13)."""
+import numpy as np
+import pytest
+
+from repro.core import overflow
+
+
+def test_bits_required():
+    assert overflow.bits_required_unsigned(0) == 1
+    assert overflow.bits_required_unsigned(1) == 1
+    assert overflow.bits_required_unsigned(22) == 5      # paper's example
+    assert overflow.bits_required_signed(-22, 22) == 6   # "six if signed"
+
+
+def test_paper_dot_product_example():
+    """§7: kernel [4,3,9,6] against unknown b-bit values needs b+5 bits."""
+    b = 4
+    kernel = np.array([4, 3, 9, 6])
+    out_min, out_max = overflow.conv_output_range(kernel, b, False)
+    assert out_max == 22 * 15
+    assert overflow.bits_required_unsigned(out_max) == b + 5
+
+
+@pytest.mark.parametrize("input_signed", [False, True])
+def test_range_is_exact_bound(input_signed):
+    """Brute-force check: no input can exceed the analysed range."""
+    rng = np.random.default_rng(0)
+    kernel = rng.integers(-3, 4, size=5)
+    bits = 3
+    lo, hi = overflow.conv_output_range(kernel, bits, input_signed)
+    in_lo, in_hi = overflow.input_range(bits, input_signed)
+    worst_hi = sum(k * (in_hi if k > 0 else in_lo) for k in kernel)
+    worst_lo = sum(k * (in_lo if k > 0 else in_hi) for k in kernel)
+    assert hi == worst_hi and lo == worst_lo
+    for _ in range(200):
+        x = rng.integers(in_lo, in_hi + 1, size=5)
+        v = int(np.dot(kernel, x))
+        assert lo <= v <= hi
+
+
+def test_relu_unsigned_input_signed_kernel():
+    """The common DNN case (§7): ReLU activations are unsigned, kernels
+    signed — the positive/negative sums bound the accumulator."""
+    kernel = np.array([[-2, 3, -1], [1, -3, 2]])
+    bits = overflow.conv_output_bits(kernel, 4, input_signed=False)
+    # pos sum = 6, neg sum = -6 -> range [-90, 90] (+borrow) -> 8 signed bits
+    assert bits == 8
+
+
+def test_plan_for_kernel_tightens_lanes():
+    """Known kernels pack tighter than the generic worst case."""
+    small_kernel = np.ones((1, 3), np.int64)  # taps of +1 only
+    plan_small = overflow.plan_for_kernel(small_kernel, 3, True, 3)
+    generic = overflow.generic_output_bits(3, 3, 3, True, True)
+    assert plan_small.fmt.lane_width < generic

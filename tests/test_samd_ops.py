@@ -1,0 +1,167 @@
+"""Core SAMD arithmetic vs exact numpy oracles (paper Figs. 2-9, 11-12)."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import overflow, samd
+
+
+def wrap(x, bits, signed):
+    x = np.asarray(x) & ((1 << bits) - 1)
+    if signed:
+        x = x - ((x >> (bits - 1)) & 1) * (1 << bits)
+    return x
+
+
+def rand(bits, signed, n, rng):
+    lo, hi = overflow.input_range(bits, signed)
+    return rng.integers(lo, hi + 1, size=n)
+
+
+@pytest.mark.parametrize("bits", [1, 2, 3, 4, 5, 6, 7, 8])
+@pytest.mark.parametrize("signed", [False, True])
+def test_pack_unpack_roundtrip(bits, signed):
+    rng = np.random.default_rng(bits)
+    fmt = samd.dense_format(bits, signed)
+    v = rand(bits, signed, (3, 41), rng)
+    out = samd.unpack(samd.pack(jnp.asarray(v), fmt), fmt, 41)
+    np.testing.assert_array_equal(np.asarray(out), v)
+
+
+@pytest.mark.parametrize("bits", [2, 3, 4, 8])
+@pytest.mark.parametrize("signed", [False, True])
+@pytest.mark.parametrize("op", ["add", "sub"])
+def test_samd_add_sub(bits, signed, op):
+    rng = np.random.default_rng(42)
+    fmt = samd.dense_format(bits, signed)
+    a = rand(bits, signed, 200, rng)
+    b = rand(bits, signed, 200, rng)
+    aw, bw = samd.pack(jnp.asarray(a), fmt), samd.pack(jnp.asarray(b), fmt)
+    if op == "add":
+        got = samd.unpack(samd.samd_add(aw, bw, fmt), fmt, 200)
+        want = wrap(a + b, bits, signed)
+    else:
+        got = samd.unpack(samd.samd_sub(aw, bw, fmt), fmt, 200)
+        want = wrap(a - b, bits, signed)
+    np.testing.assert_array_equal(np.asarray(got), want)
+
+
+@pytest.mark.parametrize("bits", [2, 4, 7])
+def test_samd_add_perm_spacer(bits):
+    """Permanent-spacer add (Fig. 2): cheap op, spacer bits absorb carries."""
+    rng = np.random.default_rng(3)
+    fmt = samd.perm_format(bits, signed=False)
+    a = rand(bits, False, 100, rng)
+    b = rand(bits, False, 100, rng)
+    aw, bw = samd.pack(jnp.asarray(a), fmt), samd.pack(jnp.asarray(b), fmt)
+    got = samd.unpack(samd.samd_add_perm(aw, bw, fmt), fmt, 100)
+    np.testing.assert_array_equal(np.asarray(got), wrap(a + b, bits, False))
+
+
+@pytest.mark.parametrize("bits", [1, 2, 3, 4, 6])
+@pytest.mark.parametrize("signed", [False, True])
+def test_samd_mul(bits, signed):
+    rng = np.random.default_rng(7)
+    fmt = samd.dense_format(bits, signed)
+    a = rand(bits, signed, 128, rng)
+    b = rand(bits, signed, 128, rng)
+    aw, bw = samd.pack(jnp.asarray(a), fmt), samd.pack(jnp.asarray(b), fmt)
+    got = samd.unpack(samd.samd_mul(aw, bw, fmt), fmt, 128)
+    np.testing.assert_array_equal(np.asarray(got), wrap(a * b, bits, signed))
+
+
+@pytest.mark.parametrize("bits", [2, 3, 4, 8])
+@pytest.mark.parametrize("signed", [False, True])
+def test_vector_scale_temp(bits, signed):
+    rng = np.random.default_rng(11)
+    fmt = samd.dense_format(bits, signed)
+    a = rand(bits, signed, 77, rng)
+    c = int(rand(bits, signed, (), rng))
+    aw = samd.pack(jnp.asarray(a), fmt)
+    scal = jnp.asarray(c & ((1 << bits) - 1), jnp.uint32)
+    got = samd.unpack(samd.vector_scale_temp(aw, scal, fmt), fmt, 77)
+    np.testing.assert_array_equal(np.asarray(got), wrap(a * c, bits, signed))
+
+
+@pytest.mark.parametrize("bits", [2, 3, 4, 8])
+@pytest.mark.parametrize("signed", [False, True])
+def test_vector_scale_perm_full_product(bits, signed):
+    """Fig. 8: b spacer bits -> the full 2b-bit product appears per lane,
+    with Fig. 11/12 sign handling."""
+    rng = np.random.default_rng(13)
+    sfmt = samd.scale_format(bits, signed)
+    a = rand(bits, signed, 50, rng)
+    c = int(rand(bits, signed, (), rng))
+    aw = samd.pack(jnp.asarray(a), sfmt)
+    if signed:
+        aw = samd.sign_extend_for_mul(aw, sfmt)
+    scal = jnp.asarray(c & 0xFFFFFFFF, jnp.uint32)
+    prod = samd.vector_scale_perm(aw, scal, sfmt)
+    if signed:
+        prod = samd.correct_signed_product(prod, sfmt)
+    got = samd.unpack_lanes_wide(prod, sfmt, 50)
+    np.testing.assert_array_equal(np.asarray(got), a * c)
+
+
+# ---------------------------------------------------------------------------
+# property-based invariants
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=60, deadline=None)
+@given(
+    bits=st.integers(2, 8),
+    signed=st.booleans(),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_property_add_matches_numpy(bits, signed, seed):
+    rng = np.random.default_rng(seed)
+    fmt = samd.dense_format(bits, signed)
+    a = rand(bits, signed, 64, rng)
+    b = rand(bits, signed, 64, rng)
+    aw, bw = samd.pack(jnp.asarray(a), fmt), samd.pack(jnp.asarray(b), fmt)
+    got = samd.unpack(samd.samd_add(aw, bw, fmt), fmt, 64)
+    np.testing.assert_array_equal(np.asarray(got), wrap(a + b, bits, signed))
+
+
+@settings(max_examples=60, deadline=None)
+@given(
+    bits=st.integers(1, 8),
+    signed=st.booleans(),
+    n=st.integers(1, 70),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_property_pack_unpack_identity(bits, signed, n, seed):
+    rng = np.random.default_rng(seed)
+    fmt = samd.dense_format(bits, signed)
+    v = rand(bits, signed, n, rng)
+    got = samd.unpack(samd.pack(jnp.asarray(v), fmt), fmt, n)
+    np.testing.assert_array_equal(np.asarray(got), v)
+
+
+@settings(max_examples=40, deadline=None)
+@given(
+    bits=st.integers(2, 6),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_property_add_commutes_and_associates(bits, seed):
+    rng = np.random.default_rng(seed)
+    fmt = samd.dense_format(bits, True)
+    a, b, c = (jnp.asarray(rand(bits, True, 32, rng)) for _ in range(3))
+    aw, bw, cw = (samd.pack(x, fmt) for x in (a, b, c))
+    ab = samd.samd_add(aw, bw, fmt)
+    ba = samd.samd_add(bw, aw, fmt)
+    np.testing.assert_array_equal(np.asarray(ab), np.asarray(ba))
+    abc1 = samd.samd_add(samd.samd_add(aw, bw, fmt), cw, fmt)
+    abc2 = samd.samd_add(aw, samd.samd_add(bw, cw, fmt), fmt)
+    np.testing.assert_array_equal(np.asarray(abc1), np.asarray(abc2))
+
+
+def test_mask_construction_matches_paper():
+    from repro.core import masks
+
+    # Fig. 3 examples at 4-bit lanes in a 16-bit region of the word
+    assert masks.build_mask(0, 1, 4, 16) == 0b0001000100010001
+    assert masks.build_mask(3, 1, 4, 16) == 0b1000100010001000
+    assert masks.build_mask(0, 4, 8, 16) == 0b0000111100001111
+    assert masks.build_mask(4, 4, 8, 16) == 0b1111000011110000

@@ -1,0 +1,104 @@
+"""End-to-end behaviour of the full system (the paper's pipeline):
+train -> loss decreases -> freeze -> SAMD-pack -> serve."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import RunConfig, smoke_config
+from repro.configs.base import ShapeConfig
+from repro.data import SyntheticLM
+from repro.launch import steps as steps_mod
+from repro.models import (
+    build_template, forward, init_from_spec, quantize_params,
+)
+from repro.optim.adamw import adamw_init
+from repro.quant.config import QuantConfig
+
+
+def test_training_reduces_loss():
+    cfg = smoke_config("qwen1.5-0.5b").scaled(
+        n_layers=2, d_model=64, vocab=128, n_heads=4, n_kv_heads=4,
+        head_dim=16, d_ff=128,
+    )
+    run = RunConfig(arch=cfg, shape=ShapeConfig("t", 64, 8, "train"),
+                    learning_rate=1e-3, lr_warmup=10)
+    tmpl = build_template(cfg)
+    params = init_from_spec(tmpl, jax.random.PRNGKey(0))
+    opt = adamw_init(params)
+    step = jax.jit(steps_mod.make_train_step(cfg, run))
+    data = SyntheticLM(cfg.vocab, 64, 8, seed=0)
+    losses = []
+    for _ in range(30):
+        batch = {k: jnp.asarray(v) for k, v in next(data).items()}
+        params, opt, metrics = step(params, opt, batch)
+        losses.append(float(metrics["loss"]))
+    assert all(np.isfinite(losses))
+    assert np.mean(losses[-5:]) < np.mean(losses[:5]) - 0.3, losses
+
+
+def test_train_then_quantize_then_serve_pipeline():
+    """The paper's deployment flow end to end: the SAMD-packed model's
+    next-token predictions track the fp model on trained data."""
+    cfg = smoke_config("qwen1.5-0.5b").scaled(
+        n_layers=2, d_model=64, vocab=128, n_heads=4, n_kv_heads=4,
+        head_dim=16, d_ff=128,
+    )
+    run = RunConfig(arch=cfg, shape=ShapeConfig("t", 64, 8, "train"),
+                    learning_rate=1e-3, lr_warmup=10)
+    tmpl = build_template(cfg)
+    params = init_from_spec(tmpl, jax.random.PRNGKey(0))
+    opt = adamw_init(params)
+    step = jax.jit(steps_mod.make_train_step(cfg, run))
+    data = SyntheticLM(cfg.vocab, 64, 8, seed=0)
+    for _ in range(40):
+        batch = {k: jnp.asarray(v) for k, v in next(data).items()}
+        params, opt, _ = step(params, opt, batch)
+
+    batch = {k: jnp.asarray(v) for k, v in next(data).items()}
+    logits_fp, _, _ = forward(params, batch["tokens"], cfg)
+    pred_fp = np.asarray(jnp.argmax(logits_fp.astype(jnp.float32), -1))
+
+    for bits, min_agree in ((8, 0.9), (4, 0.6)):
+        qparams = quantize_params(params, tmpl, QuantConfig(bits=bits))
+        logits_q, _, _ = forward(qparams, batch["tokens"], cfg)
+        pred_q = np.asarray(jnp.argmax(logits_q.astype(jnp.float32), -1))
+        agree = float(np.mean(pred_fp == pred_q))
+        assert agree >= min_agree, (bits, agree)
+
+
+def test_qat_fake_quant_trains():
+    """Fake-quant STE on weights keeps training stable (paper §7 flow)."""
+    from repro.quant.quantizer import fake_quant
+
+    cfg = smoke_config("qwen1.5-0.5b").scaled(
+        n_layers=2, d_model=64, vocab=128, n_heads=4, n_kv_heads=4,
+        head_dim=16, d_ff=128,
+    )
+    tmpl = build_template(cfg)
+    params = init_from_spec(tmpl, jax.random.PRNGKey(1))
+
+    def loss_fn(p, batch):
+        pq = jax.tree.map(
+            lambda x: fake_quant(x, 4) if x.ndim == 2 else x, p
+        )
+        logits, _, _ = forward(pq, batch["tokens"], cfg)
+        lf = logits.astype(jnp.float32)
+        lse = jax.nn.logsumexp(lf, -1)
+        tgt = jnp.take_along_axis(
+            lf, batch["targets"][..., None], -1)[..., 0]
+        return jnp.mean(lse - tgt)
+
+    data = SyntheticLM(cfg.vocab, 32, 4, seed=2)
+    opt = adamw_init(params)
+    from repro.optim import adamw_update
+
+    losses = []
+    g = jax.jit(jax.value_and_grad(loss_fn))
+    for _ in range(25):
+        batch = {k: jnp.asarray(v) for k, v in next(data).items()}
+        loss, grads = g(params, batch)
+        params, opt, _ = adamw_update(grads, opt, params,
+                                      jnp.asarray(1e-3, jnp.float32))
+        losses.append(float(loss))
+    assert np.isfinite(losses).all()
+    assert losses[-1] < losses[0]
