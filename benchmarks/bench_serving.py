@@ -1,0 +1,144 @@
+"""Serving throughput at mixed arrival times: fused ragged vs per-row.
+
+The serving engine's hot path is one jit-compiled position-ragged decode
+step (see repro/serving/engine.py). This benchmark measures end-to-end
+tokens/s under continuous batching with staggered arrivals — the traffic
+pattern that leaves slots at different positions after every refill — and
+compares:
+
+  * serving/ragged_bf16  — fused ragged decode, bf16 weights
+  * serving/ragged_b8    — fused ragged decode, SAMD 8-bit packed weights
+  * serving/ragged_b4    — fused ragged decode, SAMD 4-bit packed weights
+  * serving/per_row_bf16 — the seed engine's per-row Python fallback
+                           (decode_mode='per_row'; the baseline this PR
+                           kills)
+
+CSV columns: name, tokens_per_s, speedup_vs_per_row. The same rows (plus
+tick/call counters) are written to BENCH_serving.json with host info.
+
+Run:  PYTHONPATH=src python -m benchmarks.bench_serving [--full]
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import numpy as np
+
+from benchmarks.jsonio import write_bench_json
+
+
+def _cfg():
+    from repro.configs import smoke_config
+
+    return smoke_config("qwen1.5-0.5b").scaled(
+        n_layers=2, d_model=128, vocab=512, n_heads=4, n_kv_heads=4,
+        head_dim=32, d_ff=256,
+    )
+
+
+def _requests(vocab: int, n: int, seed: int = 0):
+    rng = np.random.default_rng(seed)
+    from repro.serving import Request
+
+    return [
+        Request(rid=i,
+                prompt=rng.integers(0, vocab, size=int(rng.integers(4, 24))),
+                max_tokens=int(rng.integers(6, 13)))
+        for i in range(n)
+    ]
+
+
+def _serve_mixed_arrivals(eng, reqs, arrive_every: int = 2) -> int:
+    """Initial burst fills the slots; the rest of the queue arrives one
+    request every ``arrive_every`` ticks, so refills keep happening while
+    survivors are mid-decode (positions stay mixed)."""
+    pending = list(reqs)
+    for _ in range(min(len(pending), eng.max_batch)):
+        eng.submit(pending.pop(0))
+    ticks = 0
+    while (pending or eng.queue
+           or any(s is not None for s in eng.slots)):
+        if pending and ticks % arrive_every == 0:
+            eng.submit(pending.pop(0))
+        eng.step()
+        ticks += 1
+        if ticks > 10_000:  # safety
+            break
+    return sum(len(r.generated) for r in eng.finished)
+
+
+def run(quick: bool = True, max_batch: int = 4, max_len: int = 96,
+        seed: int = 0):
+    """Returns (csv_rows [(name, tokens_per_s, speedup)], json_rows)."""
+    from repro.quant.config import QuantConfig
+    from repro.serving import ServingEngine
+
+    cfg = _cfg()
+    n_requests = 6 if quick else 16
+    variants = [("per_row", None), ("ragged", None), ("ragged", 4)]
+    if not quick:
+        variants.insert(2, ("ragged", 8))
+
+    results = []
+    for mode, bits in variants:
+        quant = QuantConfig(bits=bits) if bits else None
+        eng = ServingEngine(cfg, quant=quant, max_batch=max_batch,
+                            max_len=max_len, decode_mode=mode)
+        if mode == "ragged":
+            # warm the compiled steps, then measure steady-state; the
+            # per-row path has no compile cache to warm (every tick traces
+            # anew — that cost IS what the baseline measures). Warmup
+            # prompts hit every prefill bucket the measured prompt-length
+            # range [4, 24) can map to (8, 16, 32), so no XLA compile
+            # lands inside the timed region.
+            from repro.serving import Request
+
+            warm = [Request(rid=-1 - j, prompt=np.arange(ln) % cfg.vocab,
+                            max_tokens=2)
+                    for j, ln in enumerate((5, 12, 20))]
+            _serve_mixed_arrivals(eng, warm)
+            eng.reset()
+        reqs = _requests(cfg.vocab, n_requests, seed)
+        t0 = time.perf_counter()
+        tokens = _serve_mixed_arrivals(eng, reqs)
+        dt = time.perf_counter() - t0
+        name = f"serving/{mode}_{'b' + str(bits) if bits else 'bf16'}"
+        results.append((name, tokens, dt, dict(eng.stats)))
+
+    base_tps = None
+    for name, tokens, dt, _ in results:
+        if name == "serving/per_row_bf16":
+            base_tps = tokens / dt
+    csv_rows, json_rows = [], []
+    for name, tokens, dt, stats in results:
+        tps = tokens / dt
+        speedup = tps / base_tps if base_tps else 0.0
+        csv_rows.append((name, tps, speedup))
+        json_rows.append({
+            "name": name,
+            "tokens": tokens,
+            "seconds": dt,
+            "tokens_per_s": tps,
+            "speedup_vs_per_row": speedup,
+            **stats,
+        })
+    return csv_rows, json_rows
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true")
+    ap.add_argument("--out-dir", default=".")
+    args = ap.parse_args()
+
+    csv_rows, json_rows = run(quick=not args.full)
+    print("name,tokens_per_s,speedup_vs_per_row")
+    for name, tps, speedup in csv_rows:
+        print(f"{name},{tps:.2f},{speedup:.2f}")
+    path = write_bench_json("serving", json_rows, out_dir=args.out_dir)
+    print(f"# wrote {path}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,53 @@
+"""Machine-readable benchmark output: BENCH_<table>.json files.
+
+Every benchmark table is persisted as ``BENCH_<table>.json`` with the raw
+rows plus enough host info to compare runs across machines/commits — the
+perf trajectory of the repo is tracked from these artifacts.
+"""
+from __future__ import annotations
+
+import json
+import os
+import platform
+import sys
+import time
+
+
+def host_info() -> dict:
+    try:
+        import jax
+
+        jax_version = jax.__version__
+        backend = jax.default_backend()
+        device_count = jax.device_count()
+    except Exception:  # pragma: no cover - jax always present in this repo
+        jax_version, backend, device_count = None, None, None
+    return {
+        "platform": platform.platform(),
+        "machine": platform.machine(),
+        "python": sys.version.split()[0],
+        "cpu_count": os.cpu_count(),
+        "jax": jax_version,
+        "backend": backend,
+        "device_count": device_count,
+    }
+
+
+def write_bench_json(table: str, rows: list[dict], out_dir: str = ".",
+                     extra: dict | None = None) -> str:
+    """Write BENCH_<table>.json; returns the path."""
+    os.makedirs(out_dir, exist_ok=True)
+    safe = table.replace("/", "_").replace("-", "_")
+    path = os.path.join(out_dir, f"BENCH_{safe}.json")
+    doc = {
+        "table": table,
+        "created_unix": time.time(),
+        "host": host_info(),
+        "rows": rows,
+    }
+    if extra:
+        doc.update(extra)
+    with open(path, "w") as f:
+        json.dump(doc, f, indent=2)
+        f.write("\n")
+    return path

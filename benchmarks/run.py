@@ -13,8 +13,16 @@ Prints ``name,us_per_call,derived`` CSV rows:
                                   kernel's XLA path, CPU-measured): us,
                                   derived = speedup vs bf16 matmul of the
                                   same logical shape.
+  * serving/<variant>           — continuous-batching decode throughput at
+                                  mixed arrival times: value = tokens/s,
+                                  derived = speedup vs the per-row
+                                  fallback baseline (bench_serving.py).
   * roofline/<summary>          — dry-run cell counts by bound (if the
                                   artifact exists).
+
+``--json`` additionally writes machine-readable BENCH_<table>.json files
+(per-table rows + host info; see jsonio.py) so the perf trajectory is
+tracked across commits.
 
 Full sweep: python -m benchmarks.run --full (slower; all 10 VGG layers,
 bit widths 8..2).
@@ -68,11 +76,23 @@ def bench_samd_matmul(bits_list=(2, 4, 8)):
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--full", action="store_true")
+    ap.add_argument("--json", action="store_true",
+                    help="also write BENCH_<table>.json artifacts")
+    ap.add_argument("--out-dir", default=".")
+    ap.add_argument("--no-serving", action="store_true",
+                    help="skip the serving throughput table")
     ap.add_argument("--roofline-artifact",
                     default="artifacts/dryrun_baseline.jsonl")
     args = ap.parse_args()
 
-    from benchmarks import bench_vggb, roofline
+    from benchmarks import bench_serving, bench_vggb, roofline
+
+    all_rows: list[tuple[str, float, float]] = []
+
+    def emit(name: str, value: float, derived: float,
+             fmt: str = "{:.1f},{:.3f}"):
+        print(("{}," + fmt).format(name, value, derived))
+        all_rows.append((name, float(value), float(derived)))
 
     print("name,us_per_call,derived")
 
@@ -86,22 +106,43 @@ def main() -> None:
 
     for name, us, derived in bench_vggb.run(layers=layers, bit_list=bits,
                                             quick=not args.full):
-        print(f"{name},{us:.1f},{derived:.3f}")
+        emit(name, us, derived)
 
     for name, per_val, speedup in bench_vggb.op_count_model(bits):
-        print(f"{name},{per_val:.2f},{speedup:.2f}")
+        emit(name, per_val, speedup, fmt="{:.2f},{:.2f}")
 
     for name, us, derived in bench_samd_matmul():
-        print(f"{name},{us:.1f},{derived:.3f}")
+        emit(name, us, derived)
+
+    serving_json_rows = None
+    if not args.no_serving:
+        csv_rows, serving_json_rows = bench_serving.run(quick=not args.full)
+        for name, tps, speedup in csv_rows:
+            emit(name, tps, speedup, fmt="{:.2f},{:.2f}")
 
     rows = roofline.load(args.roofline_artifact)
     if rows:
         s = roofline.summarize(rows)
-        print(f"roofline/cells_ok,{s['ok']},0")
-        print(f"roofline/cells_skipped,{s['skipped']},0")
-        print(f"roofline/cells_failed,{s['failed']},0")
+        emit("roofline/cells_ok", s["ok"], 0)
+        emit("roofline/cells_skipped", s["skipped"], 0)
+        emit("roofline/cells_failed", s["failed"], 0)
         for bound, cnt in s["by_bound"].items():
-            print(f"roofline/bound_{bound},{cnt},0")
+            emit(f"roofline/bound_{bound}", cnt, 0)
+
+    if args.json:
+        from benchmarks.jsonio import write_bench_json
+
+        by_table: dict[str, list[dict]] = {}
+        for name, value, derived in all_rows:
+            table = name.split("/", 1)[0]
+            by_table.setdefault(table, []).append(
+                {"name": name, "value": value, "derived": derived}
+            )
+        for table, trows in by_table.items():
+            if table == "serving" and serving_json_rows is not None:
+                trows = serving_json_rows  # richer rows for serving
+            path = write_bench_json(table, trows, out_dir=args.out_dir)
+            print(f"# wrote {path}")
 
 
 if __name__ == "__main__":

@@ -22,6 +22,11 @@ def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--bits", type=int, default=4,
                     help="SAMD weight precision (0 = bf16)")
+    ap.add_argument("--backend", choices=("xla", "pallas"), default="xla",
+                    help="packed-matmul backend (pallas = fused unpack "
+                         "kernel; interpret mode on CPU)")
+    ap.add_argument("--temperature", type=float, default=0.0,
+                    help="0 = greedy; >0 samples in-jit (Gumbel-max)")
     ap.add_argument("--requests", type=int, default=6)
     ap.add_argument("--max-batch", type=int, default=3)
     args = ap.parse_args()
@@ -30,9 +35,10 @@ def main():
         n_layers=4, d_model=256, vocab=2048, n_heads=4, n_kv_heads=4,
         head_dim=64, d_ff=704, scan_layers=False, attn_chunk=128,
     )
-    quant = QuantConfig(bits=args.bits) if args.bits else None
+    quant = (QuantConfig(bits=args.bits, backend=args.backend)
+             if args.bits else None)
     eng = ServingEngine(cfg, quant=quant, max_batch=args.max_batch,
-                        max_len=160)
+                        max_len=160, temperature=args.temperature)
 
     n_bytes = sum(
         x.size * x.dtype.itemsize for x in jax.tree.leaves(eng.params)
@@ -53,6 +59,9 @@ def main():
     total_tokens = sum(len(r.generated) for r in done)
     print(f"served {len(done)} requests, {total_tokens} tokens "
           f"in {dt:.1f}s ({total_tokens/dt:.1f} tok/s on CPU)")
+    print(f"  fused decode steps: {eng.stats['decode_steps']}, "
+          f"batched prefills: {eng.stats['prefill_calls']}, "
+          f"per-row forwards: {eng.stats['per_row_forward_calls']}")
     for r in sorted(done, key=lambda r: r.rid):
         print(f"  req {r.rid}: prompt[{len(r.prompt)}] -> {r.generated}")
 

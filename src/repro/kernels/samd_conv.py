@@ -62,23 +62,27 @@ def _conv_kernel(x_ref, k_ref, o_ref, *, plan: ConvPlan):
         carry = (q_lo < lo).astype(jnp.uint32)
         q_hi = hi + s_hi + carry
         hi, lo = q_hi ^ s_hi, q_lo ^ s_lo
-    # extract output lanes at static offsets
+    # extract all output lanes with one broadcasted shift over a lane-offset
+    # vector (single shift/mask chain; trace size independent of lane count)
     lane_mask = jnp.uint32((1 << L) - 1)
-    outs = []
-    for t in range(plan.out_lanes_per_chunk):
-        off = t * L
-        if off + L <= 32:
-            v = (lo >> off) if off else lo
-        elif off >= 32:
-            v = hi >> (off - 32)
-        else:
-            v = (lo >> off) | (hi << (32 - off))
-        v = (v & lane_mask).astype(jnp.int32)
-        if fmt.signed:
-            sign = (v >> (L - 1)) & 1
-            v = v - (sign << L)
-        outs.append(v[:, 0])
-    o_ref[...] = jnp.stack(outs, axis=-1)
+    nt = plan.out_lanes_per_chunk
+    offs = jax.lax.broadcasted_iota(jnp.int32, (1, nt), 1) * L   # [1, nt]
+    # three sources per lane: fully in lo, fully in hi, or straddling the
+    # 32-bit boundary; shift amounts are clamped so every branch is defined
+    sh_lo = jnp.minimum(offs, 31).astype(jnp.uint32)
+    sh_hi = jnp.clip(offs - 32, 0, 31).astype(jnp.uint32)
+    sh_left = jnp.clip(32 - offs, 1, 31).astype(jnp.uint32)
+    lo_part = lo >> sh_lo                                        # [blk, nt]
+    hi_part = hi >> sh_hi
+    straddle = lo_part | (hi << sh_left)
+    v = jnp.where(
+        offs + L <= 32, lo_part, jnp.where(offs >= 32, hi_part, straddle)
+    )
+    v = (v & lane_mask).astype(jnp.int32)
+    if fmt.signed:
+        sign = (v >> (L - 1)) & 1
+        v = v - (sign << L)
+    o_ref[...] = v
 
 
 @functools.partial(jax.jit, static_argnames=("plan", "block", "interpret"))

@@ -26,15 +26,19 @@ from repro.quant.config import QuantConfig
 
 def _unpack_dequant(words, scale, bits: int, lane_width: int, vpw: int,
                     out_dtype):
-    """uint32 [bk, bn] -> dequantized [bk * vpw, bn] in VMEM (VPU ops)."""
+    """uint32 [bk, bn] -> dequantized [bk * vpw, bn] in VMEM (VPU ops).
+
+    All lanes are extracted by one broadcasted shift over a [vpw, 1, 1]
+    shift vector — the trace has a single shift/mask/select chain whose
+    size does not depend on the lane count.
+    """
     bk, bn = words.shape
-    lanes = []
     vmask = jnp.uint32((1 << bits) - 1)
-    for lane in range(vpw):
-        shift = jnp.uint32(lane * lane_width)
-        lanes.append((words >> shift) & vmask)
-    v = jnp.stack(lanes, axis=1)  # [bk, vpw, bn]
-    v = v.reshape(bk * vpw, bn).astype(jnp.int32)
+    shifts = (
+        jnp.arange(vpw, dtype=jnp.uint32) * jnp.uint32(lane_width)
+    ).reshape(vpw, 1, 1)
+    v = (words[None] >> shifts) & vmask       # [vpw, bk, bn]
+    v = jnp.moveaxis(v, 0, 1).reshape(bk * vpw, bn).astype(jnp.int32)
     sign = (v >> (bits - 1)) & 1
     v = v - (sign << bits)
     return (v.astype(jnp.float32) * scale.astype(jnp.float32)).astype(out_dtype)

@@ -118,6 +118,110 @@ def make_serve_step(cfg: ArchConfig, run: RunConfig):
     return serve_step
 
 
+def sample_tokens(logits: jax.Array, key: jax.Array,
+                  temperature: jax.Array) -> jax.Array:
+    """In-jit sampling: greedy at temperature == 0, Gumbel-max otherwise.
+
+    One trace covers both (``temperature`` is a traced scalar), so the
+    serving engine never recompiles when the sampling policy changes.
+    """
+    lf = logits.astype(jnp.float32)
+
+    def greedy(_):
+        return jnp.argmax(lf, axis=-1)
+
+    def sample(k):
+        g = jax.random.gumbel(k, lf.shape, jnp.float32)
+        return jnp.argmax(lf / jnp.maximum(temperature, 1e-6) + g, axis=-1)
+
+    # lax.cond: the greedy branch never pays for the [B, vocab] Gumbel draw
+    return jax.lax.cond(temperature > 0, sample, greedy, key).astype(
+        jnp.int32
+    )
+
+
+def make_ragged_serve_step(cfg: ArchConfig, run: RunConfig):
+    """Position-ragged decode: every slot advances at its OWN position.
+
+    The returned function is the serving hot path — one compiled step that
+    decodes a continuous-batching slot set where each row sits at a
+    different sequence position (the normal state right after a refill).
+    All per-row KV reads/writes are vectorized scatters/gathers inside the
+    jit (see layers._cache_write); sampling also happens in-jit so only the
+    [B] token-id vector ever crosses the device boundary.
+    """
+    max_len = run.shape.seq_len
+
+    def ragged_serve_step(params, tokens, cache, positions, active, key,
+                          temperature):
+        """tokens [B,1] int32; positions [B] int32 per-slot write offsets;
+        active [B] bool. Returns (next ids [B] int32 (-1 where inactive),
+        new cache). Inactive rows still write to their own cache row at a
+        clamped offset — harmless, since a slot's row is fully reset when a
+        new request is admitted into it."""
+        pos = jnp.clip(positions.astype(jnp.int32), 0, max_len - 1)
+        logits, new_cache, _ = forward(
+            params, tokens, cfg,
+            positions=pos[:, None], cache=cache, cache_index=pos,
+        )
+        next_tok = sample_tokens(logits[:, -1], key, temperature)
+        return jnp.where(active, next_tok, -1), new_cache
+
+    return ragged_serve_step
+
+
+def make_batched_prefill_step(cfg: ArchConfig, run: RunConfig,
+                              max_batch: int):
+    """Bucket-padded batched prefill for continuous-batching admission.
+
+    Prompts are right-padded to a shared bucket length; padded tokens carry
+    position -1 so their cache entries stay marked unfilled and attention
+    masks them out. The freshly-filled rows are blended into the engine
+    cache by slot id inside the same jit (deterministic where/one-hot blend
+    — no scatter with duplicate indices), and each admitted row's first
+    generated token is sampled from its last *valid* logit row.
+
+    Attention-family only (dense/moe): recurrent state (rwkv6/mamba2) has
+    no position channel, so right-padding would pollute it; the engine
+    falls back to per-slot exact-length prefill for those families.
+    """
+    max_len = run.shape.seq_len
+    kv_bits = run.quant.kv_bits if run.quant.enabled else None
+
+    def batched_prefill_step(params, tokens, lens, slot_map, valid, cache,
+                             key, temperature):
+        """tokens [Nb, Lb] right-padded; lens [Nb]; slot_map [Nb] target
+        slot per row; valid [Nb] bool (padding rows false)."""
+        nb, lb = tokens.shape
+        t_idx = jnp.arange(lb, dtype=jnp.int32)[None, :]
+        pos = jnp.where(t_idx < lens[:, None], t_idx, -1)
+        fresh = init_cache(cfg, nb, max_len, kv_bits=kv_bits)
+        logits, filled, _ = forward(
+            params, tokens, cfg, positions=pos, cache=fresh, cache_index=0,
+        )
+        last = jnp.take_along_axis(
+            logits, jnp.clip(lens - 1, 0)[:, None, None], axis=1
+        )[:, 0]
+        tok0 = sample_tokens(last, key, temperature)
+
+        # slot b <- filled row r iff valid[r] and slot_map[r] == b
+        match = valid[None, :] & (
+            slot_map[None, :] == jnp.arange(max_batch)[:, None]
+        )                                                  # [B, Nb]
+        has = jnp.any(match, axis=1)
+        src = jnp.argmax(match, axis=1)
+
+        def blend(c, r):
+            picked = jnp.take(r, src, axis=0)
+            keep = has.reshape((max_batch,) + (1,) * (c.ndim - 1))
+            return jnp.where(keep, picked.astype(c.dtype), c)
+
+        new_cache = jax.tree.map(blend, cache, filled)
+        return jnp.where(valid, tok0, -1), new_cache
+
+    return batched_prefill_step
+
+
 # ---------------------------------------------------------------------------
 # input specs (ShapeDtypeStruct stand-ins — no allocation)
 # ---------------------------------------------------------------------------

@@ -176,6 +176,24 @@ def attention(
     return out
 
 
+def _cache_write(buf: jax.Array, val: jax.Array, cache_index, s: int):
+    """Write ``val`` [B, S, ...] into ``buf`` [B, T, ...] at time offset
+    ``cache_index`` — a scalar (lockstep batch) or a [B] vector (ragged
+    batch: row i writes at its own offset). Offsets must be in-range and
+    non-negative (the serving engine clamps)."""
+    val = val.astype(buf.dtype)
+    if getattr(cache_index, "ndim", 0) == 1:
+        b = buf.shape[0]
+        rows = jnp.arange(b, dtype=jnp.int32)[:, None]
+        cols = (
+            cache_index.astype(jnp.int32)[:, None]
+            + jnp.arange(s, dtype=jnp.int32)[None, :]
+        )
+        return buf.at[rows, cols].set(val, mode="drop")
+    starts = (0, cache_index) + (0,) * (buf.ndim - 2)
+    return jax.lax.dynamic_update_slice(buf, val, starts)
+
+
 def attention_block(
     p: dict,
     x: jax.Array,            # [B, S, D]
@@ -183,12 +201,17 @@ def attention_block(
     cfg,
     *,
     kv_cache=None,           # dict(k=[B,T,Hkv,dh], v=..., pos=[B,T]) or None
-    cache_index=None,        # scalar write offset when updating the cache
+    cache_index=None,        # cache write offset: scalar, or [B] per-row
     chunk: int = 1024,
 ):
     """Full attention sub-block: norm -> qkv -> rope -> attend -> out.
 
     Returns (residual_delta, updated_cache_or_None).
+
+    ``cache_index`` may be a per-row vector [B] (ragged decode: every batch
+    row sits at its own position); writes then go through one vectorized
+    scatter instead of a lockstep dynamic_update_slice, so mixed-position
+    serving batches stay inside a single compiled step.
     """
     b, s, d = x.shape
     h, hkv, dh = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
@@ -228,17 +251,12 @@ def attention_block(
         if quantized_kv:
             kq, ks = _quant(k)
             vq, vs = _quant(v)
-            ck = jax.lax.dynamic_update_slice(
-                kv_cache["k"], kq, (0, cache_index, 0, 0))
-            cv = jax.lax.dynamic_update_slice(
-                kv_cache["v"], vq, (0, cache_index, 0, 0))
-            cks = jax.lax.dynamic_update_slice(
-                kv_cache["k_scale"], ks, (0, cache_index, 0))
-            cvs = jax.lax.dynamic_update_slice(
-                kv_cache["v_scale"], vs, (0, cache_index, 0))
-            cpos = jax.lax.dynamic_update_slice(
-                kv_cache["pos"], positions.astype(jnp.int32),
-                (0, cache_index))
+            ck = _cache_write(kv_cache["k"], kq, cache_index, s)
+            cv = _cache_write(kv_cache["v"], vq, cache_index, s)
+            cks = _cache_write(kv_cache["k_scale"], ks, cache_index, s)
+            cvs = _cache_write(kv_cache["v_scale"], vs, cache_index, s)
+            cpos = _cache_write(
+                kv_cache["pos"], positions.astype(jnp.int32), cache_index, s)
             new_cache = {"k": ck, "v": cv, "k_scale": cks, "v_scale": cvs,
                          "pos": cpos}
             k_full = (ck.astype(jnp.float32)
@@ -247,15 +265,10 @@ def attention_block(
                       * cvs[..., None]).astype(q.dtype)
             att = attention(q, k_full, v_full, positions, cpos, chunk=chunk)
         else:
-            ck = jax.lax.dynamic_update_slice(
-                kv_cache["k"], k.astype(kv_cache["k"].dtype),
-                (0, cache_index, 0, 0))
-            cv = jax.lax.dynamic_update_slice(
-                kv_cache["v"], v.astype(kv_cache["v"].dtype),
-                (0, cache_index, 0, 0))
-            cpos = jax.lax.dynamic_update_slice(
-                kv_cache["pos"], positions.astype(jnp.int32),
-                (0, cache_index))
+            ck = _cache_write(kv_cache["k"], k, cache_index, s)
+            cv = _cache_write(kv_cache["v"], v, cache_index, s)
+            cpos = _cache_write(
+                kv_cache["pos"], positions.astype(jnp.int32), cache_index, s)
             new_cache = {"k": ck, "v": cv, "pos": cpos}
             att = attention(q, ck.astype(q.dtype), cv.astype(q.dtype),
                             positions, cpos, chunk=chunk)

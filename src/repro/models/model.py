@@ -412,7 +412,10 @@ def forward(
 ):
     """Returns (logits [B, S(+P), vocab] bf16, new_cache, aux_loss f32)."""
     b, s = tokens.shape
-    x = params["embed"].astype(jnp.bfloat16)[tokens]
+    # gather THEN cast: the backward scatter-add into the embedding table
+    # accumulates in f32 (casting first would accumulate in bf16, whose
+    # rounding depends on XLA fusion — remat vs no-remat would disagree)
+    x = params["embed"][tokens].astype(jnp.bfloat16)
     if prefix_embeds is not None:
         x = jnp.concatenate([prefix_embeds.astype(x.dtype), x], axis=1)
         s = x.shape[1]

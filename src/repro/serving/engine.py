@@ -1,17 +1,34 @@
-"""Batched serving engine with SAMD-quantized weights.
+"""Batched serving engine: one compiled ragged decode step per tick.
 
 The inference-side integration of the paper: weights are SAMD-packed at
 load time (``quantize_params``), the KV cache is a fixed ring per slot, and
 requests are continuously batched into free slots — a compact vLLM-style
-scheduler sized for the benchmark/e2e-example scale.
+scheduler whose hot path is a single jit.
 
-Scheduling model:
-  * fixed ``max_batch`` decode slots;
-  * an incoming request prefises into its slot (per-slot prefill keeps the
-    example simple; production would batch prefills too — noted);
-  * every engine tick runs ONE fused decode step over all active slots;
+Scheduling model (this module's contract):
+  * fixed ``max_batch`` decode slots; host-side slot state (position, last
+    token, active flag) lives in numpy and is synced to the device once per
+    tick;
+  * admission runs ONE bucket-padded batched prefill over all admitted
+    requests (attention families; recurrent families fall back to per-slot
+    exact-length prefill, since right-padding would pollute positionless
+    recurrent state). A slot's cache row is fully reset on admission so
+    stale KV from the previous occupant can never leak into a new request;
+  * every engine tick runs ONE position-ragged fused decode step over the
+    whole slot set (``make_ragged_serve_step``): per-row KV reads/writes
+    are vectorized scatters inside the jit, so mixed-position batches —
+    the normal state right after a continuous-batching refill — never fall
+    back to per-row Python forwards;
+  * sampling (greedy or temperature/Gumbel-max) happens inside the jit;
+    only the [max_batch] vector of next token ids crosses the device
+    boundary each tick;
   * finished slots (eos or max_tokens) free immediately and are refilled
     from the queue — continuous batching.
+
+``decode_mode="per_row"`` keeps the old per-row reference path (slow, one
+``forward`` per slot per tick) for equivalence tests and as the benchmark
+baseline; ``ServingEngine.stats`` counts compiled-step and per-row-forward
+invocations so tests can assert the hot path stays fused.
 """
 from __future__ import annotations
 
@@ -47,48 +64,131 @@ class Request:
                     and self.generated[-1] == self.eos_id)
 
 
+def _bucket_len(max_prompt: int, max_len: int) -> int:
+    """Smallest power-of-two prefill bucket >= the longest admitted prompt
+    (floor 8, capped at the cache length) — bounds jit retraces to
+    O(log max_len) shapes."""
+    lb = 8
+    while lb < max_prompt:
+        lb *= 2
+    return min(lb, max_len)
+
+
 class ServingEngine:
     def __init__(self, cfg: ArchConfig, params=None, *,
                  quant: QuantConfig | None = None,
-                 max_batch: int = 4, max_len: int = 512, seed: int = 0):
+                 max_batch: int = 4, max_len: int = 512, seed: int = 0,
+                 temperature: float = 0.0,
+                 decode_mode: str = "ragged"):
+        assert decode_mode in ("ragged", "per_row"), decode_mode
         self.cfg = cfg
         self.max_batch = max_batch
         self.max_len = max_len
+        self.temperature = float(temperature)
+        self.decode_mode = decode_mode
         template = build_template(cfg)
         if params is None:
             params = init_from_spec(template, jax.random.PRNGKey(seed))
         if quant is not None and quant.enabled:
             params = quantize_params(params, template, quant)
         self.params = params
+        self.quant = quant or QuantConfig(enabled=False)
+        self._kv_bits = self.quant.kv_bits if self.quant.enabled else None
         run = RunConfig(arch=cfg,
                         shape=ShapeConfig("serve", max_len, max_batch,
                                           "decode"),
-                        quant=quant or QuantConfig(enabled=False))
-        self._decode = jax.jit(steps_mod.make_serve_step(cfg, run),
-                               donate_argnums=(2,))
-        self.cache = init_cache(cfg, max_batch, max_len)
+                        quant=self.quant)
+        self._ragged_step = jax.jit(
+            steps_mod.make_ragged_serve_step(cfg, run), donate_argnums=(2,)
+        )
+        # batched prefill needs position-masked padding => attention only;
+        # recurrent families (rwkv6 / hybrid_mamba2) prefill per slot
+        self._batched_prefill = (
+            decode_mode == "ragged" and cfg.family in ("dense", "moe")
+        )
+        if self._batched_prefill:
+            self._prefill_step = jax.jit(
+                steps_mod.make_batched_prefill_step(cfg, run, max_batch),
+                donate_argnums=(5,),
+            )
+        self.cache = init_cache(cfg, max_batch, max_len,
+                                kv_bits=self._kv_bits)
+        self._key = jax.random.PRNGKey(seed ^ 0x5EED)
+        # host-side scheduler state (numpy; one device sync per tick)
         self.queue: collections.deque[Request] = collections.deque()
         self.slots: list[Optional[Request]] = [None] * max_batch
         self.slot_pos = np.zeros(max_batch, np.int32)
         self.slot_next = np.zeros(max_batch, np.int32)
+        self.active = np.zeros(max_batch, bool)
         self.finished: list[Request] = []
+        self.stats = {
+            "decode_steps": 0,          # fused ragged decode invocations
+            "prefill_calls": 0,         # batched/fused prefill invocations
+            "per_row_prefill_calls": 0,
+            "per_row_forward_calls": 0,  # reference decode path only
+        }
+
+    # -- rng ---------------------------------------------------------------
+    def _next_key(self):
+        if self.temperature <= 0.0:
+            return self._key  # unused by greedy sampling; avoid split cost
+        self._key, k = jax.random.split(self._key)
+        return k
 
     # -- admission ---------------------------------------------------------
     def submit(self, req: Request):
         self.queue.append(req)
 
     def _admit(self):
-        for i in range(self.max_batch):
-            if self.slots[i] is None and self.queue:
-                req = self.queue.popleft()
-                self._prefill(i, req)
+        while self.queue:
+            free = [i for i, r in enumerate(self.slots) if r is None]
+            if not free:
+                return
+            batch = [self.queue.popleft()
+                     for _ in range(min(len(free), len(self.queue)))]
+            if self._batched_prefill:
+                self._prefill_batch(free[:len(batch)], batch)
+            else:
+                for slot, req in zip(free, batch):
+                    self._prefill_one(slot, req)
 
-    def _prefill(self, slot: int, req: Request):
-        """Per-slot prefill: run the prompt through with the cache write
-        offset at 0 for this slot's row. The prefill's final logits yield
-        the FIRST generated token (standard prefill->decode handoff)."""
+    def _prefill_batch(self, slots: list[int], reqs: list[Request]):
+        """Admit N requests with ONE forward: prompts right-padded to a
+        shared bucket, blended into their slots' cache rows inside the jit."""
+        lens = [len(r.prompt) for r in reqs]
+        assert max(lens) < self.max_len, "prompt too long for cache"
+        lb = _bucket_len(max(lens), self.max_len)
+        nb = self.max_batch
+        tokens = np.zeros((nb, lb), np.int32)
+        lens_a = np.zeros(nb, np.int32)
+        slot_map = np.zeros(nb, np.int32)
+        valid = np.zeros(nb, bool)
+        for row, (slot, req) in enumerate(zip(slots, reqs)):
+            tokens[row, :lens[row]] = np.asarray(req.prompt, np.int32)
+            lens_a[row] = lens[row]
+            slot_map[row] = slot
+            valid[row] = True
+        tok0, self.cache = self._prefill_step(
+            self.params, jnp.asarray(tokens), jnp.asarray(lens_a),
+            jnp.asarray(slot_map), jnp.asarray(valid), self.cache,
+            self._next_key(), jnp.float32(self.temperature),
+        )
+        self.stats["prefill_calls"] += 1
+        tok0 = np.asarray(tok0)
+        for row, (slot, req) in enumerate(zip(slots, reqs)):
+            self._finish_admit(slot, req, lens[row], int(tok0[row]))
+
+    def _prefill_one(self, slot: int, req: Request):
+        """Per-slot exact-length prefill (recurrent families / reference
+        mode). The slot's cache row is reset first: recurrent state and the
+        KV ``pos`` ring of the previous occupant must not leak."""
         t = len(req.prompt)
         assert t < self.max_len, "prompt too long for cache"
+        fresh = init_cache(self.cfg, 1, self.max_len, kv_bits=self._kv_bits)
+        self.cache = jax.tree.map(
+            lambda c, f: c.at[slot:slot + 1].set(f.astype(c.dtype)),
+            self.cache, fresh,
+        )
         tokens = jnp.asarray(req.prompt, jnp.int32)[None]
         positions = jnp.arange(t, dtype=jnp.int32)[None]
         row_cache = jax.tree.map(lambda c: c[slot:slot + 1], self.cache)
@@ -99,26 +199,43 @@ class ServingEngine:
         self.cache = jax.tree.map(
             lambda c, r: c.at[slot:slot + 1].set(r), self.cache, row_cache2
         )
-        tok0 = int(jnp.argmax(logits[0, -1].astype(jnp.float32)))
+        self.stats["per_row_prefill_calls"] += 1
+        tok0 = int(steps_mod.sample_tokens(
+            logits[:, -1], self._next_key(), jnp.float32(self.temperature)
+        )[0])
+        self._finish_admit(slot, req, t, tok0)
+
+    def _finish_admit(self, slot: int, req: Request, prompt_len: int,
+                      tok0: int):
+        """Prefill's last logits yield the FIRST generated token (standard
+        prefill->decode handoff)."""
         req.generated.append(tok0)
         if req.done:
             self.finished.append(req)
             return
         self.slots[slot] = req
-        self.slot_pos[slot] = t
+        self.slot_pos[slot] = prompt_len
         self.slot_next[slot] = tok0
+        self.active[slot] = True
 
     # -- decode ------------------------------------------------------------
     def step(self):
-        """One engine tick: admit, batched decode, retire."""
+        """One engine tick: admit, ONE fused ragged decode, retire."""
         self._admit()
-        active = [i for i, r in enumerate(self.slots) if r is not None]
-        if not active:
+        if not self.active.any():
             return False
-        toks = jnp.asarray(self.slot_next, jnp.int32)[:, None]
-        positions = jnp.asarray(self.slot_pos, jnp.int32)[:, None]
-        next_ids = self._decode_rows(toks, positions)
-        for i in active:
+        if self.decode_mode == "ragged":
+            next_ids, self.cache = self._ragged_step(
+                self.params,
+                jnp.asarray(self.slot_next[:, None]), self.cache,
+                jnp.asarray(self.slot_pos), jnp.asarray(self.active),
+                self._next_key(), jnp.float32(self.temperature),
+            )
+            self.stats["decode_steps"] += 1
+            next_ids = np.asarray(next_ids)  # the ONE host sync per tick
+        else:
+            next_ids = self._decode_rows_reference()
+        for i in np.nonzero(self.active)[0]:
             req = self.slots[i]
             req.generated.append(int(next_ids[i]))
             self.slot_pos[i] += 1
@@ -126,35 +243,48 @@ class ServingEngine:
             if req.done or self.slot_pos[i] >= self.max_len:
                 self.finished.append(req)
                 self.slots[i] = None
+                self.active[i] = False
         return True
 
-    def _decode_rows(self, toks, positions) -> np.ndarray:
-        """One token for every slot; returns greedy next ids [max_batch].
-
-        When all slots sit at the same position (steady decode), one fused
-        serve_step handles the whole batch. Mixed positions (right after a
-        refill) fall back to per-row steps — production would use a
-        per-row-position fused kernel here; noted as future work."""
-        pos_vals = np.asarray(positions[:, 0])
-        if len(set(int(p) for p in pos_vals)) == 1:
-            next_tok, self.cache = self._decode(
-                self.params, toks, self.cache,
-                jnp.asarray(int(pos_vals[0]), jnp.int32),
-            )
-            return np.asarray(next_tok)
-        out = np.zeros(toks.shape[0], np.int64)
-        for i in range(toks.shape[0]):
+    def _decode_rows_reference(self) -> np.ndarray:
+        """Reference per-row decode (the old fallback): one ``forward`` per
+        active slot. Kept for token-equivalence tests and as the benchmark
+        baseline — never used by decode_mode='ragged'."""
+        out = np.full(self.max_batch, -1, np.int64)
+        temp = jnp.float32(self.temperature)
+        for i in range(self.max_batch):
+            if not self.active[i]:
+                continue
             row_cache = jax.tree.map(lambda c: c[i:i + 1], self.cache)
+            tok = jnp.asarray(self.slot_next[i:i + 1], jnp.int32)[None]
+            pos = jnp.asarray(self.slot_pos[i:i + 1], jnp.int32)[None]
             lg, row_cache2, _ = forward(
-                self.params, toks[i:i + 1], self.cfg,
-                positions=positions[i:i + 1], cache=row_cache,
-                cache_index=int(pos_vals[i]),
+                self.params, tok, self.cfg,
+                positions=pos, cache=row_cache,
+                cache_index=int(self.slot_pos[i]),
             )
             self.cache = jax.tree.map(
                 lambda c, r: c.at[i:i + 1].set(r), self.cache, row_cache2
             )
-            out[i] = int(jnp.argmax(lg[0, -1].astype(jnp.float32)))
+            self.stats["per_row_forward_calls"] += 1
+            out[i] = int(steps_mod.sample_tokens(
+                lg[:, -1], self._next_key(), temp
+            )[0])
         return out
+
+    def reset(self):
+        """Clear all scheduler + cache state but keep the compiled steps
+        (benchmark warmup / epoch reuse without paying compilation twice)."""
+        self.cache = init_cache(self.cfg, self.max_batch, self.max_len,
+                                kv_bits=self._kv_bits)
+        self.queue.clear()
+        self.slots = [None] * self.max_batch
+        self.slot_pos[:] = 0
+        self.slot_next[:] = 0
+        self.active[:] = False
+        self.finished = []
+        for k in self.stats:
+            self.stats[k] = 0
 
     def run_to_completion(self, max_ticks: int = 10_000):
         ticks = 0

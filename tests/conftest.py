@@ -2,3 +2,13 @@ import os
 import sys
 
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+try:
+    import hypothesis  # noqa: F401
+except ModuleNotFoundError:
+    # container images without hypothesis: run property tests as a
+    # deterministic fixed-seed sweep instead of failing collection
+    sys.path.insert(0, os.path.dirname(__file__))
+    import _hypothesis_stub
+
+    _hypothesis_stub.install()

@@ -8,12 +8,16 @@ from repro.quant.config import QuantConfig
 from repro.serving import Request, ServingEngine
 
 
-def _engine(quant=None, max_batch=2):
-    cfg = smoke_config("qwen1.5-0.5b").scaled(
+def _cfg():
+    return smoke_config("qwen1.5-0.5b").scaled(
         n_layers=2, d_model=64, vocab=256, n_heads=4, n_kv_heads=4,
         head_dim=16, d_ff=128,
     )
-    return ServingEngine(cfg, quant=quant, max_batch=max_batch, max_len=64)
+
+
+def _engine(quant=None, max_batch=2, **kw):
+    return ServingEngine(_cfg(), quant=quant, max_batch=max_batch,
+                         max_len=64, **kw)
 
 
 def test_serves_requests_to_completion():
@@ -49,6 +53,125 @@ def test_greedy_decode_is_deterministic():
         done = eng.run_to_completion()
         outs.append(done[0].generated)
     assert outs[0] == outs[1]
+
+
+def test_ragged_mixed_positions_match_per_row_reference():
+    """Slots refilled mid-stream => mixed positions: the fused ragged step
+    must produce token-for-token the same output as the per-row reference
+    path, without a single per-row forward call."""
+    def run(mode):
+        eng = _engine(max_batch=2, decode_mode=mode)
+        # staggered prompt lengths + max_tokens force refills while the
+        # surviving slot is mid-decode (positions diverge immediately)
+        for i in range(5):
+            prompt = (np.arange(4 + 2 * i) * 7 + i) % 256
+            eng.submit(Request(rid=i, prompt=prompt, max_tokens=4 + i % 3))
+        done = eng.run_to_completion()
+        return {r.rid: r.generated for r in done}, eng.stats
+
+    got, stats = run("ragged")
+    ref, _ = run("per_row")
+    assert got == ref
+    assert stats["per_row_forward_calls"] == 0
+    assert stats["decode_steps"] > 0
+
+
+def test_batched_prefill_matches_per_slot_prefill():
+    """Admitting N prompts in one bucket-padded forward must yield the same
+    first generated token as per-slot exact-length prefill."""
+    prompts = [(np.arange(3 + 4 * i) * 11 + i) % 256 for i in range(3)]
+
+    def first_tokens(mode):
+        eng = _engine(max_batch=3, decode_mode=mode)
+        for i, p in enumerate(prompts):
+            # max_tokens=1 => the full output IS the prefill handoff token
+            eng.submit(Request(rid=i, prompt=p, max_tokens=1))
+        done = eng.run_to_completion()
+        return {r.rid: r.generated for r in done}, eng.stats
+
+    got, stats = first_tokens("ragged")
+    ref, _ = first_tokens("per_row")
+    assert got == ref
+    # all three admissions went through ONE fused prefill call
+    assert stats["prefill_calls"] == 1
+    assert stats["per_row_prefill_calls"] == 0
+
+
+def test_mixed_position_tick_is_one_compiled_step():
+    """Acceptance: a tick over slots at different positions runs exactly
+    one fused decode invocation and zero per-row forwards."""
+    eng = _engine(max_batch=3)
+    for i in range(3):
+        eng.submit(Request(rid=i, prompt=(np.arange(3 + 3 * i) + i) % 256,
+                           max_tokens=8))
+    eng.step()  # admit + first decode tick
+    assert len(set(eng.slot_pos[eng.active].tolist())) > 1, \
+        "test setup should produce mixed positions"
+    before = dict(eng.stats)
+    eng.step()
+    assert eng.stats["decode_steps"] == before["decode_steps"] + 1
+    assert eng.stats["per_row_forward_calls"] == 0
+    assert eng.stats["prefill_calls"] == before["prefill_calls"]
+
+
+def test_slot_reset_no_stale_kv_leak():
+    """A refilled slot must not attend to the previous occupant's KV rows:
+    a short prompt served after a long one in the same slot must match the
+    same prompt served in a fresh engine."""
+    long_prompt = (np.arange(40) * 3) % 256
+    short_prompt = (np.arange(5) * 5) % 256
+
+    eng = _engine(max_batch=1)
+    eng.submit(Request(rid=0, prompt=long_prompt, max_tokens=4))
+    eng.submit(Request(rid=1, prompt=short_prompt, max_tokens=4))
+    reused = {r.rid: r.generated for r in eng.run_to_completion()}
+
+    fresh = _engine(max_batch=1)
+    fresh.submit(Request(rid=1, prompt=short_prompt, max_tokens=4))
+    expect = {r.rid: r.generated for r in fresh.run_to_completion()}
+    assert reused[1] == expect[1]
+
+
+@pytest.mark.parametrize("family_arch", ["rwkv6-3b"])
+def test_recurrent_family_ragged_decode(family_arch):
+    """Recurrent families prefill per-slot but decode through the fused
+    ragged step (their state is position-free)."""
+    cfg = smoke_config(family_arch)
+    eng = ServingEngine(cfg, max_batch=2, max_len=48)
+    rng = np.random.default_rng(0)
+    for i in range(3):
+        eng.submit(Request(rid=i,
+                           prompt=rng.integers(0, cfg.vocab, size=4 + i),
+                           max_tokens=3))
+    done = eng.run_to_completion()
+    assert len(done) == 3
+    assert eng.stats["per_row_forward_calls"] == 0
+    assert eng.stats["decode_steps"] > 0
+
+
+def test_pallas_backend_serves_through_ragged_step():
+    """The SAMD Pallas packed-matmul kernel (interpret mode on CPU) feeds
+    the decode linears inside the fused ragged step."""
+    eng = _engine(quant=QuantConfig(bits=4, backend="pallas"))
+    eng.submit(Request(rid=0, prompt=np.arange(6) % 256, max_tokens=3))
+    eng.submit(Request(rid=1, prompt=np.arange(9) % 256, max_tokens=3))
+    done = eng.run_to_completion()
+    assert len(done) == 2
+    assert all(len(r.generated) == 3 for r in done)
+    assert eng.stats["per_row_forward_calls"] == 0
+
+
+def test_int8_kv_cache_ragged_decode():
+    """kv_bits=8: the ragged scatter writes quantized KV + per-(token,
+    head) scales; mixed-position decode must still complete fused."""
+    eng = _engine(quant=QuantConfig(bits=8, kv_bits=8))
+    for i in range(3):
+        eng.submit(Request(rid=i, prompt=(np.arange(4 + 3 * i) + i) % 256,
+                           max_tokens=4))
+    done = eng.run_to_completion()
+    assert len(done) == 3
+    assert eng.stats["per_row_forward_calls"] == 0
+    assert all(0 <= t < 256 for r in done for t in r.generated)
 
 
 @pytest.mark.parametrize("bits", [4, 8])
