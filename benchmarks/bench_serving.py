@@ -1,20 +1,34 @@
-"""Serving throughput at mixed arrival times: fused ragged vs per-row.
+"""Serving throughput at mixed arrival times: paged vs ring vs per-row.
 
 The serving engine's hot path is one jit-compiled position-ragged decode
-step (see repro/serving/engine.py). This benchmark measures end-to-end
-tokens/s under continuous batching with staggered arrivals — the traffic
-pattern that leaves slots at different positions after every refill — and
-compares:
+step over a PAGED KV cache (see repro/serving/engine.py). This benchmark
+measures end-to-end tokens/s under continuous batching with staggered
+arrivals — the traffic pattern that leaves slots at different positions
+after every refill — and compares:
 
-  * serving/ragged_bf16  — fused ragged decode, bf16 weights
-  * serving/ragged_b8    — fused ragged decode, SAMD 8-bit packed weights
-  * serving/ragged_b4    — fused ragged decode, SAMD 4-bit packed weights
-  * serving/per_row_bf16 — the seed engine's per-row Python fallback
-                           (decode_mode='per_row'; the baseline this PR
-                           kills)
+  * serving/paged_bf16       — fused ragged decode, paged KV (the default
+                               serving path), bf16 weights
+  * serving/ragged_ring_bf16 — fused ragged decode, PR 1 fixed per-slot
+                               KV ring
+  * serving/paged_b8         — paged + SAMD 8-bit packed weights (--full)
+  * serving/paged_b4         — paged + SAMD 4-bit packed weights
+  * serving/per_row_bf16     — the seed engine's per-row Python fallback
+                               (decode_mode='per_row'; the baseline PR 1
+                               killed)
+
+(The PR 1 rows serving/ragged_bf16 and serving/ragged_b4 were RENAMED when
+their backend flipped from ring to paged, so the perf-gate CI job never
+diffs a ring measurement against a paged one under a shared name.)
+
+It then runs the paged-memory acceptance check: a workload whose summed
+prompt lengths exceed ``max_batch * max_len / 2`` must be served to
+completion (no truncation, no rejection) by a page pool HALF the size of
+the ring cache — the resident-KV win block paging exists for. The
+comparison is asserted, not just printed.
 
 CSV columns: name, tokens_per_s, speedup_vs_per_row. The same rows (plus
-tick/call counters) are written to BENCH_serving.json with host info.
+tick/call counters and resident KV bytes) are written to
+BENCH_serving.json with host info.
 
 Run:  PYTHONPATH=src python -m benchmarks.bench_serving [--full]
 """
@@ -37,14 +51,16 @@ def _cfg():
     )
 
 
-def _requests(vocab: int, n: int, seed: int = 0):
+def _requests(vocab: int, n: int, seed: int = 0, min_len: int = 4,
+              max_len: int = 24, min_tok: int = 6, max_tok: int = 13):
     rng = np.random.default_rng(seed)
     from repro.serving import Request
 
     return [
         Request(rid=i,
-                prompt=rng.integers(0, vocab, size=int(rng.integers(4, 24))),
-                max_tokens=int(rng.integers(6, 13)))
+                prompt=rng.integers(0, vocab,
+                                    size=int(rng.integers(min_len, max_len))),
+                max_tokens=int(rng.integers(min_tok, max_tok)))
         for i in range(n)
     ]
 
@@ -68,6 +84,80 @@ def _serve_mixed_arrivals(eng, reqs, arrive_every: int = 2) -> int:
     return sum(len(r.generated) for r in eng.finished)
 
 
+def _warm(eng, cfg, lens=(5, 12, 20)):
+    """Hit every prefill bucket the measured prompt lengths can map to
+    (the default ``lens`` covers buckets 8/16/32 for the [4, 24) range),
+    so no XLA compile lands in the timed region. One request at a time —
+    a joint admission would bucket-pad them together and trace only the
+    largest shape."""
+    from repro.serving import Request
+
+    for j, ln in enumerate(lens):
+        eng.submit(Request(rid=-1 - j, prompt=np.arange(ln) % cfg.vocab,
+                           max_tokens=2))
+        eng.run_to_completion()
+    eng.reset()
+
+
+def paged_memory_check(cfg, max_batch: int = 4, max_len: int = 96,
+                       seed: int = 1):
+    """Acceptance: a page pool HALF the ring's size serves a workload whose
+    summed prompt lengths exceed ``max_batch * max_len / 2``, completing
+    every request untruncated, with strictly smaller resident KV bytes.
+
+    Returns the BENCH json row (after asserting all of the above)."""
+    import jax
+
+    from repro.models import init_cache
+    from repro.serving import ServingEngine
+
+    # ring resident bytes from the cache pytree alone — no need to build a
+    # whole throwaway engine (param init + jit setup) to measure it
+    ring_bytes = int(sum(
+        x.nbytes for x in jax.tree.leaves(init_cache(cfg, max_batch,
+                                                     max_len))
+    ))
+    page_size = 16
+    full_pool = max_batch * -(-max_len // page_size)  # engine's default
+    eng = ServingEngine(cfg, max_batch=max_batch, max_len=max_len,
+                        kv_mode="paged", page_size=page_size,
+                        num_pages=full_pool // 2)
+    paged_bytes = eng.kv_cache_bytes()
+
+    # long-prompt-heavy workload: summed prompt lengths ~4x the threshold
+    reqs = _requests(cfg.vocab, 16, seed, min_len=max_len // 3,
+                     max_len=(3 * max_len) // 4, min_tok=6, max_tok=13)
+    sum_prompt = sum(len(r.prompt) for r in reqs)
+    threshold = max_batch * max_len / 2
+    assert sum_prompt > threshold, (sum_prompt, threshold)
+
+    # warm every prefill bucket the [max_len/3, 3*max_len/4) prompt range
+    # can map to, so no compile lands in the timed region
+    _warm(eng, cfg, lens=(max_len // 3, max_len // 2, (3 * max_len) // 4))
+    t0 = time.perf_counter()
+    tokens = _serve_mixed_arrivals(eng, reqs)
+    dt = time.perf_counter() - t0
+    done = eng.finished
+    assert len(done) == len(reqs), "paged pool must serve every request"
+    assert not any(r.truncated for r in done), \
+        "half-size pool must not need OOP truncation for this workload"
+    assert not any(r.error for r in done)
+    assert paged_bytes < ring_bytes, (paged_bytes, ring_bytes)
+
+    return {
+        "name": "serving/paged_halfpool_bf16",
+        "tokens": tokens,
+        "seconds": dt,
+        "tokens_per_s": tokens / dt,
+        "sum_prompt_tokens": sum_prompt,
+        "sum_prompt_threshold": threshold,
+        "paged_kv_bytes": paged_bytes,
+        "ring_kv_bytes": ring_bytes,
+        "kv_bytes_ratio": paged_bytes / ring_bytes,
+        **eng.stats,
+    }
+
+
 def run(quick: bool = True, max_batch: int = 4, max_len: int = 96,
         seed: int = 0):
     """Returns (csv_rows [(name, tokens_per_s, speedup)], json_rows)."""
@@ -75,43 +165,43 @@ def run(quick: bool = True, max_batch: int = 4, max_len: int = 96,
     from repro.serving import ServingEngine
 
     cfg = _cfg()
-    n_requests = 6 if quick else 16
-    variants = [("per_row", None), ("ragged", None), ("ragged", 4)]
+    # enough decode work that each timed region is O(seconds): at ~1k tok/s
+    # a 6-request burst measures ~0.05s — pure scheduler/OS noise
+    n_requests = 24 if quick else 64
+    # (row suffix, decode_mode, weight bits, kv_mode)
+    variants = [
+        ("per_row_bf16", "per_row", None, "auto"),
+        ("paged_bf16", "ragged", None, "paged"),
+        ("ragged_ring_bf16", "ragged", None, "ring"),
+        ("paged_b4", "ragged", 4, "paged"),
+    ]
     if not quick:
-        variants.insert(2, ("ragged", 8))
+        variants.insert(3, ("paged_b8", "ragged", 8, "paged"))
 
     results = []
-    for mode, bits in variants:
+    for suffix, mode, bits, kv_mode in variants:
         quant = QuantConfig(bits=bits) if bits else None
         eng = ServingEngine(cfg, quant=quant, max_batch=max_batch,
-                            max_len=max_len, decode_mode=mode)
+                            max_len=max_len, decode_mode=mode,
+                            kv_mode=kv_mode)
         if mode == "ragged":
             # warm the compiled steps, then measure steady-state; the
             # per-row path has no compile cache to warm (every tick traces
-            # anew — that cost IS what the baseline measures). Warmup
-            # prompts hit every prefill bucket the measured prompt-length
-            # range [4, 24) can map to (8, 16, 32), so no XLA compile
-            # lands inside the timed region.
-            from repro.serving import Request
-
-            warm = [Request(rid=-1 - j, prompt=np.arange(ln) % cfg.vocab,
-                            max_tokens=2)
-                    for j, ln in enumerate((5, 12, 20))]
-            _serve_mixed_arrivals(eng, warm)
-            eng.reset()
+            # anew — that cost IS what the baseline measures).
+            _warm(eng, cfg)
         reqs = _requests(cfg.vocab, n_requests, seed)
         t0 = time.perf_counter()
         tokens = _serve_mixed_arrivals(eng, reqs)
         dt = time.perf_counter() - t0
-        name = f"serving/{mode}_{'b' + str(bits) if bits else 'bf16'}"
-        results.append((name, tokens, dt, dict(eng.stats)))
+        results.append((f"serving/{suffix}", tokens, dt,
+                        eng.kv_cache_bytes(), dict(eng.stats)))
 
     base_tps = None
-    for name, tokens, dt, _ in results:
+    for name, tokens, dt, _, _ in results:
         if name == "serving/per_row_bf16":
             base_tps = tokens / dt
     csv_rows, json_rows = [], []
-    for name, tokens, dt, stats in results:
+    for name, tokens, dt, kv_bytes, stats in results:
         tps = tokens / dt
         speedup = tps / base_tps if base_tps else 0.0
         csv_rows.append((name, tps, speedup))
@@ -121,8 +211,13 @@ def run(quick: bool = True, max_batch: int = 4, max_len: int = 96,
             "seconds": dt,
             "tokens_per_s": tps,
             "speedup_vs_per_row": speedup,
+            "kv_cache_bytes": kv_bytes,
             **stats,
         })
+
+    mem_row = paged_memory_check(cfg, max_batch=max_batch, max_len=max_len)
+    csv_rows.append((mem_row["name"], mem_row["tokens_per_s"], 0.0))
+    json_rows.append(mem_row)
     return csv_rows, json_rows
 
 
@@ -136,6 +231,13 @@ def main() -> None:
     print("name,tokens_per_s,speedup_vs_per_row")
     for name, tps, speedup in csv_rows:
         print(f"{name},{tps:.2f},{speedup:.2f}")
+    mem = next(r for r in json_rows
+               if r["name"] == "serving/paged_halfpool_bf16")
+    print(f"# paged resident KV {mem['paged_kv_bytes']} B vs ring "
+          f"{mem['ring_kv_bytes']} B "
+          f"(ratio {mem['kv_bytes_ratio']:.2f}) serving "
+          f"{mem['sum_prompt_tokens']} summed prompt tokens "
+          f"(> {mem['sum_prompt_threshold']:.0f} threshold) — OK")
     path = write_bench_json("serving", json_rows, out_dir=args.out_dir)
     print(f"# wrote {path}")
 

@@ -1,0 +1,104 @@
+"""Perf-regression gate: diff BENCH_*.json artifacts between two commits.
+
+CI runs the serving benchmark twice on the same runner — once at the
+previous commit, once at HEAD — and this gate fails (exit 1) if any row
+shared by both artifacts regressed ``tokens_per_s`` by more than the
+threshold (default 20%). Rows present in only one artifact (new or
+renamed benchmarks) are reported but never fail the gate; a missing
+baseline file (first run, or the previous commit predates the benchmark)
+passes with a notice so the gate can be enabled on any history. Rows
+matching an ``--exclude`` substring are skipped — by default the
+``per_row`` reference rows, whose runtime is dominated by per-tick
+retracing (compile time, not serving throughput) and therefore noisy.
+
+When a benchmark's MEANING changes (e.g. a row's backend is swapped),
+rename the row rather than reusing the name: the gate must only ever
+compare like with like.
+
+Run:  python -m benchmarks.perf_gate --baseline old/BENCH_serving.json \
+          --current BENCH_serving.json [--threshold 0.20]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+
+
+def load_rows(path: str, metric: str) -> dict:
+    """name -> metric value for every row carrying the metric."""
+    with open(path) as f:
+        doc = json.load(f)
+    out = {}
+    for row in doc.get("rows", []):
+        name = row.get("name")
+        if name is not None and metric in row:
+            out[name] = float(row[metric])
+    return out
+
+
+def compare(baseline: dict, current: dict, threshold: float,
+            exclude: tuple = ()):
+    """Returns (report_lines, regressions) for name->value dicts.
+
+    A row regresses when current < baseline * (1 - threshold). Higher is
+    assumed better (tokens/s). Rows whose name contains any ``exclude``
+    substring are skipped."""
+    lines, regressions = [], []
+    for name in sorted(set(baseline) | set(current)):
+        if any(pat in name for pat in exclude):
+            lines.append(f"  {name}: excluded")
+            continue
+        if name not in current:
+            lines.append(f"  {name}: removed (baseline "
+                         f"{baseline[name]:.2f}) — ignored")
+            continue
+        if name not in baseline:
+            lines.append(f"  {name}: new ({current[name]:.2f}) — ignored")
+            continue
+        base, cur = baseline[name], current[name]
+        ratio = cur / base if base else float("inf")
+        verdict = "OK"
+        if cur < base * (1.0 - threshold):
+            verdict = "REGRESSION"
+            regressions.append((name, base, cur, ratio))
+        lines.append(
+            f"  {name}: {base:.2f} -> {cur:.2f} ({ratio:.2%}) {verdict}"
+        )
+    return lines, regressions
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--baseline", required=True,
+                    help="previous commit's BENCH_*.json")
+    ap.add_argument("--current", required=True, help="HEAD's BENCH_*.json")
+    ap.add_argument("--metric", default="tokens_per_s")
+    ap.add_argument("--threshold", type=float, default=0.20,
+                    help="max allowed fractional drop (0.20 = 20%%)")
+    ap.add_argument("--exclude", action="append", default=None,
+                    help="skip rows whose name contains this substring "
+                         "(repeatable; default: per_row)")
+    args = ap.parse_args(argv)
+    exclude = tuple(args.exclude) if args.exclude else ("per_row",)
+
+    if not os.path.exists(args.baseline):
+        print(f"perf_gate: no baseline at {args.baseline} "
+              "(first run?) — passing")
+        return 0
+    baseline = load_rows(args.baseline, args.metric)
+    current = load_rows(args.current, args.metric)
+    lines, regressions = compare(baseline, current, args.threshold, exclude)
+    print(f"perf_gate: {args.metric}, threshold {args.threshold:.0%}")
+    print("\n".join(lines))
+    if regressions:
+        print(f"perf_gate: FAIL — {len(regressions)} row(s) regressed "
+              f"more than {args.threshold:.0%}")
+        return 1
+    print("perf_gate: PASS")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -62,8 +62,14 @@ def main():
     print(f"  fused decode steps: {eng.stats['decode_steps']}, "
           f"batched prefills: {eng.stats['prefill_calls']}, "
           f"per-row forwards: {eng.stats['per_row_forward_calls']}")
+    print(f"  KV: {eng.kv_mode} ({eng.num_pages} pages x {eng.page_size} "
+          f"tokens, {eng.kv_cache_bytes()/1e6:.2f}MB resident, "
+          f"{eng.stats['page_grants']} mid-decode grants)")
     for r in sorted(done, key=lambda r: r.rid):
-        print(f"  req {r.rid}: prompt[{len(r.prompt)}] -> {r.generated}")
+        flags = " [truncated]" if r.truncated else ""
+        flags += f" [error: {r.error}]" if r.error else ""
+        print(f"  req {r.rid}: prompt[{len(r.prompt)}] -> "
+              f"{r.generated}{flags}")
 
 
 if __name__ == "__main__":

@@ -91,12 +91,21 @@ def samd_matmul(
     kw, n = packed.shape
     vpw = cfg.values_per_word
     assert kw * vpw >= k, (kw, vpw, k)
-    # pad x so the unpacked lanes line up with the packed words
-    if kw * vpw != k:
-        x = jnp.pad(x, ((0, 0), (0, kw * vpw - k)))
     bm = min(block_m, m)
     bn = min(block_n, n)
     bkw = min(block_kw, kw)
+    # pad the reduction axis to a whole number of K-blocks: a ragged last
+    # K-block would read out-of-bounds words/activations, which Pallas
+    # leaves UNDEFINED (NaN in interpret mode, garbage on TPU) and which —
+    # unlike ragged M/N blocks — contaminate real output elements through
+    # the accumulator. Zero words dequantize to 0.0 and contribute nothing.
+    kw_pad = pl.cdiv(kw, bkw) * bkw - kw
+    if kw_pad:
+        packed = jnp.pad(packed, ((0, kw_pad), (0, 0)))
+    # pad x so the unpacked lanes line up with the (padded) packed words
+    if (kw + kw_pad) * vpw != k:
+        x = jnp.pad(x, ((0, 0), (0, (kw + kw_pad) * vpw - k)))
+    kw += kw_pad
     grid = (pl.cdiv(m, bm), pl.cdiv(n, bn), pl.cdiv(kw, bkw))
 
     out = pl.pallas_call(

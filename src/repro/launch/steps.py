@@ -170,6 +170,63 @@ def make_ragged_serve_step(cfg: ArchConfig, run: RunConfig):
     return ragged_serve_step
 
 
+def make_paged_ragged_serve_step(cfg: ArchConfig, run: RunConfig,
+                                 page_size: int):
+    """Position-ragged decode against the PAGED KV pool.
+
+    Same contract as ``make_ragged_serve_step`` plus a ``page_table``
+    [B, n_pp] argument: row i's token is written at pool page
+    ``page_table[i, pos_i // page_size]``, offset ``pos_i % page_size`` —
+    the (page, offset) generalization of the ragged (row, offset) scatter.
+    Rows whose page-table row is all -1 (inactive slots) write nowhere and
+    read an all-masked key set, so no reset of retired slots is needed.
+    """
+    max_len = run.shape.seq_len
+
+    def paged_ragged_serve_step(params, tokens, cache, positions, active,
+                                page_table, key, temperature):
+        pos = jnp.clip(positions.astype(jnp.int32), 0, max_len - 1)
+        logits, new_cache, _ = forward(
+            params, tokens, cfg,
+            positions=pos[:, None], cache=cache,
+            page_table=page_table, page_size=page_size,
+        )
+        next_tok = sample_tokens(logits[:, -1], key, temperature)
+        return jnp.where(active, next_tok, -1), new_cache
+
+    return paged_ragged_serve_step
+
+
+def make_paged_prefill_step(cfg: ArchConfig, run: RunConfig,
+                            page_size: int):
+    """Bucket-padded batched prefill writing straight into the page pool.
+
+    Unlike the ring-cache variant there is no fresh-cache + blend-by-slot
+    step: each admitted row's KV lands directly in the pages its table
+    names, and padding rows (valid=False, page table all -1) write nothing.
+    Attention-family only, like ``make_batched_prefill_step``.
+    """
+
+    def paged_prefill_step(params, tokens, lens, page_table, valid, cache,
+                           key, temperature):
+        """tokens [Nb, Lb] right-padded; lens [Nb]; page_table [Nb, n_pp]
+        pool pages of each row's TARGET SLOT; valid [Nb] bool."""
+        nb, lb = tokens.shape
+        t_idx = jnp.arange(lb, dtype=jnp.int32)[None, :]
+        pos = jnp.where(t_idx < lens[:, None], t_idx, -1)
+        logits, new_cache, _ = forward(
+            params, tokens, cfg, positions=pos, cache=cache,
+            page_table=page_table, page_size=page_size,
+        )
+        last = jnp.take_along_axis(
+            logits, jnp.clip(lens - 1, 0)[:, None, None], axis=1
+        )[:, 0]
+        tok0 = sample_tokens(last, key, temperature)
+        return jnp.where(valid, tok0, -1), new_cache
+
+    return paged_prefill_step
+
+
 def make_batched_prefill_step(cfg: ArchConfig, run: RunConfig,
                               max_batch: int):
     """Bucket-padded batched prefill for continuous-batching admission.

@@ -194,6 +194,79 @@ def _cache_write(buf: jax.Array, val: jax.Array, cache_index, s: int):
     return jax.lax.dynamic_update_slice(buf, val, starts)
 
 
+# ---------------------------------------------------------------------------
+# paged KV cache (vLLM-style block tables over a global page pool)
+# ---------------------------------------------------------------------------
+#
+# Pool layout: each attention layer owns pool tensors [P, page_size, ...]
+# (P pages shared by ALL slots). A host-managed page table [B, n_pp] maps a
+# slot's logical block index to a pool page; -1 marks an unallocated block.
+# Token at logical position t of slot b lives at pool page
+# ``page_table[b, t // page_size]``, offset ``t % page_size``.
+#
+# Validity is derived, not stored: a gathered key at logical position t is
+# valid iff its block is allocated, and causality (k_pos <= q_pos) masks
+# allocated-but-not-yet-written offsets — every position <= the row's
+# current position has been written by the CURRENT occupant, because pages
+# are granted before the write that needs them and freed pages re-enter the
+# pool only after retirement. No per-token ``pos`` buffer is needed.
+
+def _paged_flat_index(page_table: jax.Array, positions: jax.Array,
+                      page_size: int, oob: int) -> jax.Array:
+    """Map logical ``positions`` [B, S] to flat pool indices [B, S] through
+    ``page_table`` [B, n_pp]. Invalid entries (negative position, block
+    beyond the table, unallocated page) map to ``oob`` — an index one past
+    the pool end, so ``mode='drop'``/``'fill'`` discards them. (A -1
+    sentinel would silently WRAP to the last pool slot: jax .at[] indexing
+    normalizes negative indices before applying the OOB mode.)"""
+    n_pp = page_table.shape[1]
+    pos = positions.astype(jnp.int32)
+    block = pos // page_size
+    page = jnp.take_along_axis(
+        page_table.astype(jnp.int32), jnp.clip(block, 0, n_pp - 1), axis=1
+    )
+    ok = (pos >= 0) & (block < n_pp) & (page >= 0)
+    return jnp.where(ok, page * page_size + pos % page_size, oob)
+
+
+def _paged_write(pool: jax.Array, val: jax.Array, page_table: jax.Array,
+                 positions: jax.Array, page_size: int) -> jax.Array:
+    """Scatter ``val`` [B, S, ...] into ``pool`` [P, page_size, ...] at the
+    slots named by (page_table, positions) — the paged generalization of
+    the ragged ``_cache_write``. Invalid positions are dropped."""
+    p = pool.shape[0]
+    flat = pool.reshape((p * page_size,) + pool.shape[2:])
+    idx = _paged_flat_index(page_table, positions, page_size, p * page_size)
+    out = flat.at[idx.reshape(-1)].set(
+        val.astype(pool.dtype).reshape((-1,) + val.shape[2:]), mode="drop"
+    )
+    return out.reshape(pool.shape)
+
+
+def _paged_gather(pool: jax.Array, page_table: jax.Array,
+                  page_size: int) -> jax.Array:
+    """Gather each row's pages into a contiguous [B, n_pp * page_size, ...]
+    view (logical token order). PAGE-granular take — one contiguous block
+    copy per page, far cheaper than an elementwise gather. Unallocated
+    blocks read an arbitrary (clamped) page: their contents never reach
+    attention, because _paged_key_positions marks them -1 and the score
+    mask zeroes them (stored values are always finite, so no NaN risk)."""
+    b, n_pp = page_table.shape
+    safe = jnp.clip(page_table.astype(jnp.int32), 0, pool.shape[0] - 1)
+    pages = jnp.take(pool, safe.reshape(-1), axis=0)
+    return pages.reshape((b, n_pp * page_size) + pool.shape[2:])
+
+
+def _paged_key_positions(page_table: jax.Array, page_size: int) -> jax.Array:
+    """k_pos [B, n_pp * page_size] for the gathered view: the logical
+    position for allocated blocks, -1 (masked) for unallocated ones."""
+    b, n_pp = page_table.shape
+    length = n_pp * page_size
+    iota = jnp.arange(length, dtype=jnp.int32)[None, :]
+    valid = jnp.repeat(page_table >= 0, page_size, axis=1)
+    return jnp.where(valid, iota, -1)
+
+
 def attention_block(
     p: dict,
     x: jax.Array,            # [B, S, D]
@@ -202,6 +275,8 @@ def attention_block(
     *,
     kv_cache=None,           # dict(k=[B,T,Hkv,dh], v=..., pos=[B,T]) or None
     cache_index=None,        # cache write offset: scalar, or [B] per-row
+    page_table=None,         # [B, n_pp] int32: paged KV (pool-shaped cache)
+    page_size: int = 0,
     chunk: int = 1024,
 ):
     """Full attention sub-block: norm -> qkv -> rope -> attend -> out.
@@ -212,6 +287,14 @@ def attention_block(
     row sits at its own position); writes then go through one vectorized
     scatter instead of a lockstep dynamic_update_slice, so mixed-position
     serving batches stay inside a single compiled step.
+
+    When ``page_table`` is given, ``kv_cache`` leaves are page pools
+    [P, page_size, ...] instead of per-slot rings [B, T, ...]: writes
+    scatter through the table at each token's logical position (the
+    ``(page, offset)`` generalization of the ragged ``(row, offset)``
+    writes) and the attention keys are gathered back per row in logical
+    order. ``cache_index`` is ignored — ``positions`` already names every
+    written token's offset.
     """
     b, s, d = x.shape
     h, hkv, dh = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
@@ -248,7 +331,44 @@ def attention_block(
             ).astype(jnp.int8)
             return qv, scale
 
-        if quantized_kv:
+        if page_table is not None:
+            k_pos = _paged_key_positions(page_table, page_size)
+            if quantized_kv:
+                kq, ks = _quant(k)
+                vq, vs = _quant(v)
+                new_cache = {
+                    "k": _paged_write(kv_cache["k"], kq, page_table,
+                                      positions, page_size),
+                    "v": _paged_write(kv_cache["v"], vq, page_table,
+                                      positions, page_size),
+                    "k_scale": _paged_write(kv_cache["k_scale"], ks,
+                                            page_table, positions, page_size),
+                    "v_scale": _paged_write(kv_cache["v_scale"], vs,
+                                            page_table, positions, page_size),
+                }
+                kg = _paged_gather(new_cache["k"], page_table, page_size)
+                vg = _paged_gather(new_cache["v"], page_table, page_size)
+                ksg = _paged_gather(new_cache["k_scale"], page_table,
+                                    page_size)
+                vsg = _paged_gather(new_cache["v_scale"], page_table,
+                                    page_size)
+                k_full = (kg.astype(jnp.float32)
+                          * ksg[..., None]).astype(q.dtype)
+                v_full = (vg.astype(jnp.float32)
+                          * vsg[..., None]).astype(q.dtype)
+            else:
+                new_cache = {
+                    "k": _paged_write(kv_cache["k"], k, page_table,
+                                      positions, page_size),
+                    "v": _paged_write(kv_cache["v"], v, page_table,
+                                      positions, page_size),
+                }
+                k_full = _paged_gather(
+                    new_cache["k"], page_table, page_size).astype(q.dtype)
+                v_full = _paged_gather(
+                    new_cache["v"], page_table, page_size).astype(q.dtype)
+            att = attention(q, k_full, v_full, positions, k_pos, chunk=chunk)
+        elif quantized_kv:
             kq, ks = _quant(k)
             vq, vs = _quant(v)
             ck = _cache_write(kv_cache["k"], kq, cache_index, s)

@@ -300,12 +300,55 @@ def init_cache(cfg: ArchConfig, batch: int, max_len: int,
     return cache
 
 
+def init_paged_cache(cfg: ArchConfig, num_pages: int, page_size: int,
+                     dtype=jnp.bfloat16, stacked: bool = False,
+                     kv_bits: Optional[int] = None) -> dict:
+    """Decode-time KV state as a global page pool (vLLM-style paging).
+
+    Every attention layer owns ``num_pages`` pages of ``page_size`` tokens;
+    which slot owns which page is a host-side page table passed to
+    ``forward`` per call, NOT part of this pytree — long and short requests
+    share the pool, so resident KV memory is ``num_pages * page_size``
+    tokens per layer instead of ``max_batch * max_len``. Attention families
+    only (recurrent state is O(1) per slot — nothing to page). No per-token
+    ``pos`` buffer: key validity is derived from the page table plus
+    causality (see layers._paged_key_positions).
+    """
+    if cfg.family not in ("dense", "moe"):
+        raise ValueError(
+            f"paged KV cache needs an attention family, got {cfg.family}"
+        )
+
+    def kv_pool():
+        shape = (num_pages, page_size, cfg.n_kv_heads, cfg.head_dim)
+        if kv_bits == 8:
+            return {
+                "k": jnp.zeros(shape, jnp.int8),
+                "v": jnp.zeros(shape, jnp.int8),
+                "k_scale": jnp.zeros(shape[:3], jnp.float32),
+                "v_scale": jnp.zeros(shape[:3], jnp.float32),
+            }
+        return {"k": jnp.zeros(shape, dtype), "v": jnp.zeros(shape, dtype)}
+
+    if stacked:
+        one = kv_pool()
+        return {
+            "layers_stacked": jax.tree.map(
+                lambda x: jnp.broadcast_to(
+                    x, (cfg.n_layers,) + x.shape
+                ).copy(),
+                one,
+            )
+        }
+    return {"layers": [kv_pool() for _ in range(cfg.n_layers)]}
+
+
 # ---------------------------------------------------------------------------
 # forward
 # ---------------------------------------------------------------------------
 
 def _scan_blocks(params, x, positions, cfg, remat, cache=None,
-                 cache_index=0):
+                 cache_index=0, page_table=None, page_size=0):
     """lax.scan over stacked layer params (compile time O(1) in depth).
 
     remat='block' composes naturally: jax.checkpoint wraps the scan body,
@@ -326,6 +369,7 @@ def _scan_blocks(params, x, positions, cfg, remat, cache=None,
             delta, new_kv = L.attention_block(
                 p["attn"], xc, positions, cfg,
                 kv_cache=kv_c, cache_index=cache_index,
+                page_table=page_table, page_size=page_size,
                 chunk=cfg.attn_chunk,
             )
             xc = xc + delta
@@ -342,6 +386,7 @@ def _scan_blocks(params, x, positions, cfg, remat, cache=None,
             delta, new_kv = L.attention_block(
                 p["attn"], xc, positions, cfg,
                 kv_cache=kv_c, cache_index=cache_index,
+                page_table=page_table, page_size=page_size,
                 chunk=cfg.attn_chunk,
             )
             xc = xc + delta
@@ -407,10 +452,17 @@ def forward(
     positions: Optional[jax.Array] = None,
     cache: Optional[dict] = None,
     cache_index=0,
+    page_table: Optional[jax.Array] = None,
+    page_size: int = 0,
     prefix_embeds: Optional[jax.Array] = None,
     remat: bool = False,
 ):
-    """Returns (logits [B, S(+P), vocab] bf16, new_cache, aux_loss f32)."""
+    """Returns (logits [B, S(+P), vocab] bf16, new_cache, aux_loss f32).
+
+    ``page_table`` [B, n_pp] switches attention KV caching to the paged
+    pool layout (``init_paged_cache``); ``cache_index`` is then unused —
+    every token's cache slot is derived from its logical position.
+    """
     b, s = tokens.shape
     # gather THEN cast: the backward scatter-add into the embedding table
     # accumulates in f32 (casting first would accumulate in bf16, whose
@@ -431,7 +483,8 @@ def forward(
             "(prefill); decode uses the unrolled list layout"
         )
         x, aux_total, new_stacked = _scan_blocks(
-            params, x, positions, cfg, remat, cache, cache_index
+            params, x, positions, cfg, remat, cache, cache_index,
+            page_table, page_size,
         )
         x = L.rms_norm(x, params["final_ln"], cfg.norm_eps)
         if cfg.tie_embeddings:
@@ -448,7 +501,9 @@ def forward(
     def dense_block(p, x, kv_c):
         delta, new_kv = L.attention_block(
             p["attn"], x, positions, cfg,
-            kv_cache=kv_c, cache_index=cache_index, chunk=cfg.attn_chunk,
+            kv_cache=kv_c, cache_index=cache_index,
+            page_table=page_table, page_size=page_size,
+            chunk=cfg.attn_chunk,
         )
         x = x + delta
         x = x + L.mlp_block(p["mlp"], x, cfg)
@@ -457,7 +512,9 @@ def forward(
     def moe_layer(p, x, kv_c):
         delta, new_kv = L.attention_block(
             p["attn"], x, positions, cfg,
-            kv_cache=kv_c, cache_index=cache_index, chunk=cfg.attn_chunk,
+            kv_cache=kv_c, cache_index=cache_index,
+            page_table=page_table, page_size=page_size,
+            chunk=cfg.attn_chunk,
         )
         x = x + delta
         mo, aux = L.moe_block(p["moe"], x, cfg,

@@ -1,34 +1,69 @@
-"""Batched serving engine: one compiled ragged decode step per tick.
+"""Batched serving engine: paged KV cache + one compiled ragged decode step.
 
 The inference-side integration of the paper: weights are SAMD-packed at
-load time (``quantize_params``), the KV cache is a fixed ring per slot, and
-requests are continuously batched into free slots — a compact vLLM-style
-scheduler whose hot path is a single jit.
+load time (``quantize_params``), requests are continuously batched into
+fixed decode slots, and KV memory is a global pool of fixed-size pages
+shared by all slots — a compact vLLM-style scheduler whose hot path is a
+single jit.
 
 Scheduling model (this module's contract):
   * fixed ``max_batch`` decode slots; host-side slot state (position, last
-    token, active flag) lives in numpy and is synced to the device once per
-    tick;
+    token, active flag, page table) lives in numpy and is synced to the
+    device once per tick;
   * admission runs ONE bucket-padded batched prefill over all admitted
     requests (attention families; recurrent families fall back to per-slot
     exact-length prefill, since right-padding would pollute positionless
-    recurrent state). A slot's cache row is fully reset on admission so
-    stale KV from the previous occupant can never leak into a new request;
+    recurrent state). Prompts with ``len(prompt) >= max_len`` are REJECTED
+    gracefully — the request lands in ``finished`` with ``error`` set and
+    no tokens, and every other in-flight request keeps serving;
   * every engine tick runs ONE position-ragged fused decode step over the
-    whole slot set (``make_ragged_serve_step``): per-row KV reads/writes
-    are vectorized scatters inside the jit, so mixed-position batches —
-    the normal state right after a continuous-batching refill — never fall
-    back to per-row Python forwards;
+    whole slot set: per-row KV reads/writes are vectorized scatters inside
+    the jit, so mixed-position batches — the normal state right after a
+    continuous-batching refill — never fall back to per-row Python
+    forwards;
   * sampling (greedy or temperature/Gumbel-max) happens inside the jit;
     only the [max_batch] vector of next token ids crosses the device
     boundary each tick;
   * finished slots (eos or max_tokens) free immediately and are refilled
-    from the queue — continuous batching.
+    from the queue — continuous batching. A slot that hits ``max_len``
+    before finishing is force-retired with ``truncated=True`` so callers
+    can tell truncation from completion.
 
+Paged KV contract (``kv_mode="paged"``, the default for attention
+families under ragged decode):
+  * each attention layer owns a pool of ``num_pages`` KV pages of
+    ``page_size`` tokens (int8-quantized pages when ``quant.kv_bits=8``);
+    resident KV memory is ``num_pages * page_size`` tokens per layer, NOT
+    ``max_batch * max_len`` — long and short requests share the pool;
+  * allocation lifecycle: admission takes ``ceil(len(prompt)/page_size)``
+    pages from the host-side free list and — under the default
+    ``admission="reserve"`` policy — additionally RESERVES the request's
+    worst-case decode growth, ``ceil(min(len + max_tokens - 1, max_len) /
+    page_size)`` pages in total (the final sampled token is never written
+    back), so mid-decode grants can never fail. A
+    request whose pages are not available yet waits at the queue head;
+    one that could never fit the pool is rejected with ``error``. Each
+    decode tick grants one more page (claimed from the reservation) to
+    any slot whose next write crosses a page boundary; ALL of a slot's
+    pages and unused reservations return to the free list the moment its
+    request retires (natural, truncated, or rejected-at-admission);
+  * ``admission="optimistic"`` skips the growth reservation — higher
+    admission concurrency, but the pool can run dry mid-decode.
+    Out-of-pages (OOP) behavior: if a page grant fails because the pool
+    is exhausted, THAT slot is force-retired with ``truncated=True`` (its
+    pages fund the remaining slots) and serving continues — the engine
+    never deadlocks and never crashes on pool pressure;
+  * freed pages are NOT scrubbed: validity of a gathered key derives from
+    the page table plus causal masking, so a new occupant can never attend
+    to a previous occupant's KV (see layers._paged_key_positions).
+
+``kv_mode="ring"`` keeps the PR 1 fixed per-slot KV ring (also the
+automatic fallback for recurrent families and ``decode_mode="per_row"``);
 ``decode_mode="per_row"`` keeps the old per-row reference path (slow, one
 ``forward`` per slot per tick) for equivalence tests and as the benchmark
-baseline; ``ServingEngine.stats`` counts compiled-step and per-row-forward
-invocations so tests can assert the hot path stays fused.
+baseline. ``ServingEngine.stats`` counts compiled-step, per-row-forward,
+page-grant and OOP-retire events so tests can assert the hot path stays
+fused and pool pressure is visible.
 """
 from __future__ import annotations
 
@@ -43,7 +78,8 @@ import numpy as np
 from repro.configs.base import ArchConfig, RunConfig, ShapeConfig
 from repro.launch import steps as steps_mod
 from repro.models import (
-    build_template, forward, init_cache, init_from_spec, quantize_params,
+    build_template, forward, init_cache, init_paged_cache, init_from_spec,
+    quantize_params,
 )
 from repro.quant.config import QuantConfig
 
@@ -55,6 +91,9 @@ class Request:
     max_tokens: int = 16
     eos_id: Optional[int] = None
     generated: list = dataclasses.field(default_factory=list)
+    # outcome flags (set by the engine):
+    truncated: bool = False     # force-retired (cache/page-pool exhaustion)
+    error: Optional[str] = None  # rejected before prefill; no tokens
 
     @property
     def done(self) -> bool:
@@ -62,6 +101,56 @@ class Request:
             return True
         return bool(self.generated and self.eos_id is not None
                     and self.generated[-1] == self.eos_id)
+
+
+class PageAllocator:
+    """Host-side free list over the global KV page pool (O(1) alloc/free).
+
+    Besides outright allocation it tracks RESERVATIONS: pages promised to
+    admitted requests for their future decode growth but not yet bound to
+    a page table. Reserved pages stay in the free list (they hold no data)
+    yet are invisible to further admissions, so a reservation-admitted
+    request can always claim its next page mid-decode."""
+
+    def __init__(self, num_pages: int):
+        self.num_pages = num_pages
+        self._free = list(range(num_pages - 1, -1, -1))
+        self.reserved = 0
+
+    @property
+    def free_pages(self) -> int:
+        return len(self._free)
+
+    @property
+    def available(self) -> int:
+        """Pages an admission may take or reserve right now."""
+        return len(self._free) - self.reserved
+
+    def alloc(self, n: int, reserve: int = 0) -> Optional[list]:
+        """Take ``n`` pages and reserve ``reserve`` more, or None (and
+        take nothing) unless all ``n + reserve`` are available."""
+        if n + reserve > self.available:
+            return None
+        self.reserved += reserve
+        return [self._free.pop() for _ in range(n)]
+
+    def claim_reserved(self, n: int = 1) -> list:
+        """Convert previously reserved pages into real ones (never fails:
+        the reservation guarantees them)."""
+        assert 0 <= n <= self.reserved <= len(self._free)
+        self.reserved -= n
+        return [self._free.pop() for _ in range(n)]
+
+    def cancel_reservation(self, n: int) -> None:
+        self.reserved -= n
+        assert self.reserved >= 0
+
+    def release(self, pages) -> None:
+        self._free.extend(int(p) for p in pages)
+
+    def reset(self) -> None:
+        self._free = list(range(self.num_pages - 1, -1, -1))
+        self.reserved = 0
 
 
 def _bucket_len(max_prompt: int, max_len: int) -> int:
@@ -79,13 +168,43 @@ class ServingEngine:
                  quant: QuantConfig | None = None,
                  max_batch: int = 4, max_len: int = 512, seed: int = 0,
                  temperature: float = 0.0,
-                 decode_mode: str = "ragged"):
+                 decode_mode: str = "ragged",
+                 kv_mode: str = "auto",
+                 page_size: int = 16,
+                 num_pages: Optional[int] = None,
+                 admission: str = "reserve"):
         assert decode_mode in ("ragged", "per_row"), decode_mode
+        assert admission in ("reserve", "optimistic"), admission
+        # paged KV needs the batched admission path and pool-shaped cache
+        # inside the fused steps; the per-row reference path slices per-slot
+        # cache rows and recurrent families have O(1) state — both fall
+        # back to the ring.
+        paged_capable = (
+            decode_mode == "ragged" and cfg.family in ("dense", "moe")
+        )
+        if kv_mode == "auto":
+            kv_mode = "paged" if paged_capable else "ring"
+        assert kv_mode in ("paged", "ring"), kv_mode
+        if kv_mode == "paged" and not paged_capable:
+            raise ValueError(
+                "kv_mode='paged' needs decode_mode='ragged' and an "
+                f"attention family, got {decode_mode}/{cfg.family}"
+            )
         self.cfg = cfg
         self.max_batch = max_batch
         self.max_len = max_len
         self.temperature = float(temperature)
         self.decode_mode = decode_mode
+        self.kv_mode = kv_mode
+        self.admission = admission
+        self.page_size = page_size
+        self.pages_per_slot = -(-max_len // page_size)
+        if num_pages is None:
+            # full coverage by default: paged is then a drop-in for the
+            # ring (token-identical, no truncation risk); size it smaller
+            # to trade memory for OOP truncation under pressure.
+            num_pages = max_batch * self.pages_per_slot
+        self.num_pages = num_pages
         template = build_template(cfg)
         if params is None:
             params = init_from_spec(template, jax.random.PRNGKey(seed))
@@ -98,21 +217,31 @@ class ServingEngine:
                         shape=ShapeConfig("serve", max_len, max_batch,
                                           "decode"),
                         quant=self.quant)
-        self._ragged_step = jax.jit(
-            steps_mod.make_ragged_serve_step(cfg, run), donate_argnums=(2,)
-        )
+        if kv_mode == "paged":
+            self._ragged_step = jax.jit(
+                steps_mod.make_paged_ragged_serve_step(cfg, run, page_size),
+                donate_argnums=(2,),
+            )
+        else:
+            self._ragged_step = jax.jit(
+                steps_mod.make_ragged_serve_step(cfg, run),
+                donate_argnums=(2,),
+            )
         # batched prefill needs position-masked padding => attention only;
-        # recurrent families (rwkv6 / hybrid_mamba2) prefill per slot
-        self._batched_prefill = (
-            decode_mode == "ragged" and cfg.family in ("dense", "moe")
-        )
-        if self._batched_prefill:
+        # recurrent families (rwkv6 / hybrid_mamba2) prefill per slot —
+        # exactly the paged-capability condition
+        self._batched_prefill = paged_capable
+        if kv_mode == "paged":
+            self._prefill_step = jax.jit(
+                steps_mod.make_paged_prefill_step(cfg, run, page_size),
+                donate_argnums=(5,),
+            )
+        elif self._batched_prefill:
             self._prefill_step = jax.jit(
                 steps_mod.make_batched_prefill_step(cfg, run, max_batch),
                 donate_argnums=(5,),
             )
-        self.cache = init_cache(cfg, max_batch, max_len,
-                                kv_bits=self._kv_bits)
+        self.cache = self._init_cache()
         self._key = jax.random.PRNGKey(seed ^ 0x5EED)
         # host-side scheduler state (numpy; one device sync per tick)
         self.queue: collections.deque[Request] = collections.deque()
@@ -121,12 +250,33 @@ class ServingEngine:
         self.slot_next = np.zeros(max_batch, np.int32)
         self.active = np.zeros(max_batch, bool)
         self.finished: list[Request] = []
+        self._allocator = PageAllocator(num_pages)
+        self.page_table = np.full((max_batch, self.pages_per_slot), -1,
+                                  np.int32)
+        self.slot_pages = np.zeros(max_batch, np.int32)     # allocated count
+        self.slot_reserved = np.zeros(max_batch, np.int32)  # growth pages
         self.stats = {
             "decode_steps": 0,          # fused ragged decode invocations
             "prefill_calls": 0,         # batched/fused prefill invocations
             "per_row_prefill_calls": 0,
             "per_row_forward_calls": 0,  # reference decode path only
+            "page_grants": 0,           # incremental mid-decode page allocs
+            "oop_retired": 0,           # slots truncated on pool exhaustion
+            "rejected": 0,              # requests refused before prefill
         }
+
+    def _init_cache(self):
+        if self.kv_mode == "paged":
+            return init_paged_cache(self.cfg, self.num_pages, self.page_size,
+                                    kv_bits=self._kv_bits)
+        return init_cache(self.cfg, self.max_batch, self.max_len,
+                          kv_bits=self._kv_bits)
+
+    def kv_cache_bytes(self) -> int:
+        """Resident bytes of the KV cache / recurrent-state pytree (for the
+        paged mode this is the page pool — the memory the paging exists to
+        shrink)."""
+        return int(sum(x.nbytes for x in jax.tree.leaves(self.cache)))
 
     # -- rng ---------------------------------------------------------------
     def _next_key(self):
@@ -139,38 +289,98 @@ class ServingEngine:
     def submit(self, req: Request):
         self.queue.append(req)
 
+    def _reject(self, req: Request, reason: str):
+        """Finish a request without serving it (regression guard: a bad
+        request must never take down in-flight traffic)."""
+        req.error = reason
+        self.finished.append(req)
+        self.stats["rejected"] += 1
+
     def _admit(self):
         while self.queue:
             free = [i for i, r in enumerate(self.slots) if r is None]
             if not free:
                 return
-            batch = [self.queue.popleft()
-                     for _ in range(min(len(free), len(self.queue)))]
+            batch: list[Request] = []
+            batch_slots: list[int] = []
+            while self.queue and len(batch) < len(free):
+                req = self.queue.popleft()
+                if len(req.prompt) >= self.max_len:
+                    # bugfix: this used to trip an assert inside prefill and
+                    # kill the engine mid-tick, losing every in-flight
+                    # request
+                    self._reject(
+                        req,
+                        f"prompt length {len(req.prompt)} >= max_len "
+                        f"{self.max_len}",
+                    )
+                    continue
+                slot = free[len(batch)]
+                if self.kv_mode == "paged":
+                    need = max(1, -(-len(req.prompt) // self.page_size))
+                    # worst-case decode growth: the first generated token
+                    # comes from prefill without a cache write, so writes
+                    # reach at most position len + max_tokens - 2
+                    horizon_tok = min(len(req.prompt) + req.max_tokens - 1,
+                                      self.max_len)
+                    horizon = max(need, -(-horizon_tok // self.page_size))
+                    reserve = (horizon - need
+                               if self.admission == "reserve" else 0)
+                    if need + reserve > self.num_pages:
+                        self._reject(
+                            req,
+                            f"request needs {need + reserve} KV pages; "
+                            f"pool holds {self.num_pages}",
+                        )
+                        continue
+                    pages = self._allocator.alloc(need, reserve=reserve)
+                    if pages is None:
+                        # pool pressure: wait at the queue head until a
+                        # retirement frees pages
+                        self.queue.appendleft(req)
+                        break
+                    self.page_table[slot, :need] = pages
+                    self.slot_pages[slot] = need
+                    self.slot_reserved[slot] = reserve
+                batch.append(req)
+                batch_slots.append(slot)
+            if not batch:
+                return
             if self._batched_prefill:
-                self._prefill_batch(free[:len(batch)], batch)
+                self._prefill_batch(batch_slots, batch)
             else:
-                for slot, req in zip(free, batch):
+                for slot, req in zip(batch_slots, batch):
                     self._prefill_one(slot, req)
 
     def _prefill_batch(self, slots: list[int], reqs: list[Request]):
         """Admit N requests with ONE forward: prompts right-padded to a
-        shared bucket, blended into their slots' cache rows inside the jit."""
+        shared bucket. Ring mode blends the filled rows into the slots'
+        cache rows inside the jit; paged mode writes straight into the
+        slots' pages through their page tables."""
         lens = [len(r.prompt) for r in reqs]
-        assert max(lens) < self.max_len, "prompt too long for cache"
+        assert max(lens) < self.max_len, "admission rejects over-long prompts"
         lb = _bucket_len(max(lens), self.max_len)
         nb = self.max_batch
         tokens = np.zeros((nb, lb), np.int32)
         lens_a = np.zeros(nb, np.int32)
-        slot_map = np.zeros(nb, np.int32)
         valid = np.zeros(nb, bool)
-        for row, (slot, req) in enumerate(zip(slots, reqs)):
+        for row, req in enumerate(reqs):
             tokens[row, :lens[row]] = np.asarray(req.prompt, np.int32)
             lens_a[row] = lens[row]
-            slot_map[row] = slot
             valid[row] = True
+        if self.kv_mode == "paged":
+            # rows write through their target slot's page table
+            route = np.full((nb, self.pages_per_slot), -1, np.int32)
+            for row, slot in enumerate(slots):
+                route[row] = self.page_table[slot]
+        else:
+            # rows are blended into their target slot's ring row in-jit
+            route = np.zeros(nb, np.int32)
+            for row, slot in enumerate(slots):
+                route[row] = slot
         tok0, self.cache = self._prefill_step(
             self.params, jnp.asarray(tokens), jnp.asarray(lens_a),
-            jnp.asarray(slot_map), jnp.asarray(valid), self.cache,
+            jnp.asarray(route), jnp.asarray(valid), self.cache,
             self._next_key(), jnp.float32(self.temperature),
         )
         self.stats["prefill_calls"] += 1
@@ -180,10 +390,11 @@ class ServingEngine:
 
     def _prefill_one(self, slot: int, req: Request):
         """Per-slot exact-length prefill (recurrent families / reference
-        mode). The slot's cache row is reset first: recurrent state and the
-        KV ``pos`` ring of the previous occupant must not leak."""
+        mode; ring cache only). The slot's cache row is reset first:
+        recurrent state and the KV ``pos`` ring of the previous occupant
+        must not leak."""
         t = len(req.prompt)
-        assert t < self.max_len, "prompt too long for cache"
+        assert t < self.max_len, "admission rejects over-long prompts"
         fresh = init_cache(self.cfg, 1, self.max_len, kv_bits=self._kv_bits)
         self.cache = jax.tree.map(
             lambda c, f: c.at[slot:slot + 1].set(f.astype(c.dtype)),
@@ -211,6 +422,7 @@ class ServingEngine:
         prefill->decode handoff)."""
         req.generated.append(tok0)
         if req.done:
+            self._release_pages(slot)
             self.finished.append(req)
             return
         self.slots[slot] = req
@@ -218,18 +430,71 @@ class ServingEngine:
         self.slot_next[slot] = tok0
         self.active[slot] = True
 
+    # -- paged allocation --------------------------------------------------
+    def _release_pages(self, slot: int):
+        """Return every page a slot holds (and cancel its unused growth
+        reservation) to the free list — the retire path."""
+        if self.kv_mode != "paged":
+            return
+        held = self.page_table[slot][self.page_table[slot] >= 0]
+        if held.size:
+            self._allocator.release(held)
+        if self.slot_reserved[slot]:
+            self._allocator.cancel_reservation(int(self.slot_reserved[slot]))
+        self.page_table[slot] = -1
+        self.slot_pages[slot] = 0
+        self.slot_reserved[slot] = 0
+
+    def _grant_pages(self):
+        """Before the tick's write at ``slot_pos[i]``, make sure the page
+        covering it exists. Reservation-admitted slots claim from their
+        reservation (never fails); under ``admission='optimistic'`` the
+        grant can find the pool dry — OOP policy: THAT slot is force-
+        retired (truncated=True) and its freed pages fund the remaining
+        slots, so serving always makes progress."""
+        for i in np.nonzero(self.active)[0]:
+            block = int(self.slot_pos[i]) // self.page_size
+            if block < int(self.slot_pages[i]):
+                continue
+            if self.slot_reserved[i] > 0:
+                page = self._allocator.claim_reserved(1)[0]
+                self.slot_reserved[i] -= 1
+            else:
+                pages = self._allocator.alloc(1)
+                if pages is None:
+                    req = self.slots[i]
+                    req.truncated = True
+                    self._release_pages(i)
+                    self.finished.append(req)
+                    self.slots[i] = None
+                    self.active[i] = False
+                    self.stats["oop_retired"] += 1
+                    continue
+                page = pages[0]
+            self.page_table[i, block] = page
+            self.slot_pages[i] = block + 1
+            self.stats["page_grants"] += 1
+
     # -- decode ------------------------------------------------------------
     def step(self):
-        """One engine tick: admit, ONE fused ragged decode, retire."""
+        """One engine tick: admit, grant pages, ONE fused decode, retire."""
         self._admit()
         if not self.active.any():
             return False
+        if self.kv_mode == "paged":
+            self._grant_pages()
+            if not self.active.any():
+                return True  # progress: pool-exhausted slots were retired
         if self.decode_mode == "ragged":
-            next_ids, self.cache = self._ragged_step(
+            args = [
                 self.params,
                 jnp.asarray(self.slot_next[:, None]), self.cache,
                 jnp.asarray(self.slot_pos), jnp.asarray(self.active),
-                self._next_key(), jnp.float32(self.temperature),
+            ]
+            if self.kv_mode == "paged":
+                args.append(jnp.asarray(self.page_table))
+            next_ids, self.cache = self._ragged_step(
+                *args, self._next_key(), jnp.float32(self.temperature)
             )
             self.stats["decode_steps"] += 1
             next_ids = np.asarray(next_ids)  # the ONE host sync per tick
@@ -241,6 +506,11 @@ class ServingEngine:
             self.slot_pos[i] += 1
             self.slot_next[i] = int(next_ids[i])
             if req.done or self.slot_pos[i] >= self.max_len:
+                if not req.done:
+                    # bugfix: forced retirement at cache exhaustion used to
+                    # be indistinguishable from natural completion
+                    req.truncated = True
+                self._release_pages(i)
                 self.finished.append(req)
                 self.slots[i] = None
                 self.active[i] = False
@@ -275,14 +545,17 @@ class ServingEngine:
     def reset(self):
         """Clear all scheduler + cache state but keep the compiled steps
         (benchmark warmup / epoch reuse without paying compilation twice)."""
-        self.cache = init_cache(self.cfg, self.max_batch, self.max_len,
-                                kv_bits=self._kv_bits)
+        self.cache = self._init_cache()
         self.queue.clear()
         self.slots = [None] * self.max_batch
         self.slot_pos[:] = 0
         self.slot_next[:] = 0
         self.active[:] = False
         self.finished = []
+        self._allocator.reset()
+        self.page_table[:] = -1
+        self.slot_pages[:] = 0
+        self.slot_reserved[:] = 0
         for k in self.stats:
             self.stats[k] = 0
 

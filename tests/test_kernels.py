@@ -25,6 +25,27 @@ def test_samd_matmul_vs_ref(bits, shape):
                                rtol=1e-5, atol=1e-4)
 
 
+@pytest.mark.parametrize("k", [704, 576, 200])
+@pytest.mark.parametrize("bits", [4, 8])
+def test_samd_matmul_ragged_k_blocks(bits, k):
+    """Regression: K whose packed word count is NOT a multiple of the
+    kernel's K-block (e.g. K=704, bits=4 -> 88 words vs block 64) used to
+    read undefined out-of-bounds words in the last K-block — NaN in
+    interpret mode, silent garbage on TPU. The reduction axis must be
+    zero-padded to whole blocks."""
+    rng = np.random.default_rng(k + bits)
+    cfg = QuantConfig(bits=bits)
+    n, m = 96, 4
+    w = jnp.asarray(rng.normal(size=(k, n)), jnp.float32)
+    x = jnp.asarray(rng.normal(size=(m, k)), jnp.float32)
+    packed, scale = pack_weights(w, cfg)
+    got = np.asarray(ops.samd_matmul(x, packed, scale, k, cfg,
+                                     interpret=True))
+    assert not np.isnan(got).any()
+    want = ref.samd_matmul_ref(x, packed, scale, k, cfg)
+    np.testing.assert_allclose(got, np.asarray(want), rtol=1e-5, atol=1e-4)
+
+
 @pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
 def test_samd_matmul_dtypes(dtype):
     rng = np.random.default_rng(0)

@@ -1,0 +1,39 @@
+"""CI perf-regression gate over BENCH_*.json artifacts."""
+import json
+
+from benchmarks.perf_gate import compare, load_rows, main
+
+
+def test_compare_flags_only_real_regressions():
+    base = {"serving/a": 100.0, "serving/b": 50.0, "serving/gone": 10.0,
+            "serving/per_row_x": 10.0}
+    cur = {"serving/a": 85.0, "serving/b": 30.0, "serving/new": 99.0,
+           "serving/per_row_x": 1.0}
+    lines, regressions = compare(base, cur, threshold=0.20,
+                                 exclude=("per_row",))
+    # a dropped 15% (allowed), b dropped 40% (regression); new/removed and
+    # excluded rows never fail the gate
+    assert [r[0] for r in regressions] == ["serving/b"]
+    assert any("serving/new" in ln and "ignored" in ln for ln in lines)
+    assert any("serving/gone" in ln and "ignored" in ln for ln in lines)
+    assert any("serving/per_row_x" in ln and "excluded" in ln
+               for ln in lines)
+
+
+def test_gate_end_to_end(tmp_path):
+    def write(path, rows):
+        path.write_text(json.dumps({"table": "serving", "rows": rows}))
+
+    base = tmp_path / "base.json"
+    cur = tmp_path / "cur.json"
+    write(base, [{"name": "serving/x", "tokens_per_s": 100.0},
+                 {"name": "serving/no_metric"}])
+    write(cur, [{"name": "serving/x", "tokens_per_s": 81.0}])
+    assert load_rows(str(base), "tokens_per_s") == {"serving/x": 100.0}
+    ok = main(["--baseline", str(base), "--current", str(cur)])
+    assert ok == 0  # 19% drop passes the 20% gate
+    write(cur, [{"name": "serving/x", "tokens_per_s": 79.0}])
+    assert main(["--baseline", str(base), "--current", str(cur)]) == 1
+    # missing baseline (first run) must pass
+    assert main(["--baseline", str(tmp_path / "absent.json"),
+                 "--current", str(cur)]) == 0

@@ -3,9 +3,12 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
 
+from repro.core import samd
 from repro.quant import QuantConfig, pack_weights, qmatmul
-from repro.quant.packing import dequant_weights
+from repro.quant.packing import dequant_weights, unpack_weights
 from repro.quant.quantizer import fake_quant, quantize_symmetric
 
 
@@ -58,6 +61,100 @@ def test_qmatmul_accuracy_scales_with_bits():
         y = qmatmul(x, packed, scale, 256, cfg)
         errs.append(float(jnp.mean(jnp.abs(y - exact))))
     assert errs[0] > errs[1] > errs[2]
+
+
+# ---------------------------------------------------------------------------
+# property tests: SAMD pack/unpack round-trips
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=80, deadline=None)
+@given(
+    bits=st.integers(1, 16),
+    spacer_bits=st.integers(0, 6),
+    signed=st.booleans(),
+    n=st.integers(1, 45),
+    seed=st.integers(0, 2**16),
+)
+def test_samd_pack_unpack_roundtrip(bits, spacer_bits, signed, n, seed):
+    """samd.pack -> samd.unpack is the identity on in-range values for any
+    (bits, lane_width, signedness) — including the top lane of a word (the
+    sign-extension hot spot) and lane counts that do NOT divide the word
+    width (leftover high bits must stay dead)."""
+    lane_width = min(bits + spacer_bits, 32)
+    fmt = samd.SAMDFormat(bits, lane_width, signed=signed, word_bits=32)
+    lo = -(1 << (bits - 1)) if signed else 0
+    hi = (1 << (bits - 1)) - 1 if signed else (1 << bits) - 1
+    rng = np.random.default_rng(seed)
+    vals = rng.integers(lo, hi + 1, size=(2, n), dtype=np.int64)
+    # always exercise the extremes (top-lane sign bit set / all-ones lane)
+    vals[0, 0] = lo
+    vals[-1, -1] = hi
+    words = samd.pack(jnp.asarray(vals, jnp.int32), fmt)
+    out = np.asarray(samd.unpack(words, fmt, n))
+    np.testing.assert_array_equal(out, vals)
+    # leftover bits above the last whole lane must be zero, else lane-wise
+    # arithmetic would see phantom values
+    k = fmt.lanes_per_word
+    if k * lane_width < 32:
+        dead = np.asarray(words, np.uint32) >> np.uint32(k * lane_width)
+        assert (dead == 0).all()
+
+
+@settings(max_examples=60, deadline=None)
+@given(
+    bits=st.integers(2, 16),
+    spacer=st.sampled_from(["temporary", "permanent"]),
+    k=st.integers(1, 70),
+    cols=st.integers(1, 5),
+    seed=st.integers(0, 2**16),
+)
+def test_pack_weights_unpack_weights_roundtrip(bits, spacer, k, cols, seed):
+    """pack_weights -> unpack_weights returns exactly the quantizer's int
+    codes for any bit width, spacer regime, and K — including K that does
+    not divide values_per_word (ragged final word)."""
+    cfg = QuantConfig(bits=bits, spacer=spacer)
+    rng = np.random.default_rng(seed)
+    w = jnp.asarray(rng.normal(size=(k, cols)), jnp.float32)
+    q, scale = quantize_symmetric(w, bits, axis=0)
+    packed, scale2 = pack_weights(w, cfg)
+    assert packed.shape[0] == -(-k // cfg.values_per_word)
+    out = np.asarray(unpack_weights(packed, k, cfg))
+    np.testing.assert_array_equal(out, np.asarray(q))
+    np.testing.assert_allclose(np.asarray(scale2), np.asarray(scale))
+
+
+@settings(max_examples=40, deadline=None)
+@given(
+    bits=st.integers(2, 15),
+    signed=st.booleans(),
+    n=st.integers(1, 33),
+    seed=st.integers(0, 2**16),
+)
+def test_samd_wide_lane_roundtrip(bits, signed, n, seed):
+    """Vector-scale formats read the WHOLE lane back (value + spacer bits):
+    sign_extend_for_mul + unpack_lanes_wide must recover signed values even
+    when the top lane touches the word's MSB.
+
+    Signed words need :func:`correct_signed_product` before the wide read:
+    in the base-2^lane_width polynomial a negative lane borrows 1 from the
+    lane above (paper Fig. 12) — this sweep without the fixup is off by
+    one wherever the lane below is negative, which is exactly the bug the
+    fixup exists to repair (conv.py applies it on the product path)."""
+    fmt = samd.scale_format(bits, signed=signed)
+    lo = -(1 << (bits - 1)) if signed else 0
+    hi = (1 << (bits - 1)) - 1 if signed else (1 << bits) - 1
+    rng = np.random.default_rng(seed)
+    vals = rng.integers(lo, hi + 1, size=(n,), dtype=np.int64)
+    vals[0] = lo
+    packed = samd.pack(jnp.asarray(vals, jnp.int32),
+                       samd.SAMDFormat(bits, fmt.lane_width, signed))
+    if signed:
+        packed = samd.sign_extend_for_mul(
+            packed, samd.SAMDFormat(bits, fmt.lane_width, signed)
+        )
+        packed = samd.correct_signed_product(packed, fmt)
+    out = np.asarray(samd.unpack_lanes_wide(packed, fmt, n))
+    np.testing.assert_array_equal(out, vals)
 
 
 def test_fake_quant_ste_gradient():

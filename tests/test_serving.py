@@ -174,6 +174,214 @@ def test_int8_kv_cache_ragged_decode():
     assert all(0 <= t < 256 for r in done for t in r.generated)
 
 
+# ---------------------------------------------------------------------------
+# paged KV cache
+# ---------------------------------------------------------------------------
+
+def _mixed_arrival_run(eng, n_reqs=6, arrive_every=2, seed=3):
+    """Continuous-batching traffic with MID-STREAM refills: an initial
+    burst fills the slots, later requests arrive while survivors are
+    mid-decode, so slots are refilled at mixed positions."""
+    rng = np.random.default_rng(seed)
+    reqs = [Request(rid=i,
+                    prompt=(np.arange(3 + int(rng.integers(0, 12))) * 7 + i)
+                    % 256,
+                    max_tokens=3 + int(rng.integers(0, 5)))
+            for i in range(n_reqs)]
+    pending = list(reqs)
+    for _ in range(min(len(pending), eng.max_batch)):
+        eng.submit(pending.pop(0))
+    ticks = 0
+    while pending or eng.queue or any(s is not None for s in eng.slots):
+        if pending and ticks % arrive_every == 0:
+            eng.submit(pending.pop(0))
+        eng.step()
+        ticks += 1
+        assert ticks < 2_000
+    return {r.rid: r.generated for r in eng.finished}
+
+
+def test_paged_is_default_and_matches_ring_under_midstream_refills():
+    """Acceptance: the paged cache (the default) must produce token-
+    identical greedy output to the PR 1 ring cache under mixed-arrival
+    continuous batching, with zero per-row fallbacks."""
+    eng_paged = _engine(max_batch=2)
+    assert eng_paged.kv_mode == "paged", "paged must be the default"
+    got = _mixed_arrival_run(eng_paged)
+
+    eng_ring = _engine(max_batch=2, kv_mode="ring")
+    ref = _mixed_arrival_run(eng_ring)
+
+    assert got == ref
+    assert eng_paged.stats["per_row_forward_calls"] == 0
+    assert eng_paged.stats["decode_steps"] > 0
+    assert eng_paged.stats["prefill_calls"] > 0
+
+
+def test_paged_page_grants_cross_boundaries():
+    """A long decode crosses page boundaries: pages are granted
+    incrementally and freed on retirement."""
+    eng = _engine(max_batch=2, page_size=8)
+    eng.submit(Request(rid=0, prompt=np.arange(10) % 256, max_tokens=20))
+    done = eng.run_to_completion()
+    assert len(done) == 1 and len(done[0].generated) == 20
+    assert eng.stats["page_grants"] > 0
+    assert eng._allocator.free_pages == eng.num_pages, \
+        "all pages must return to the free list on retirement"
+    assert (eng.page_table == -1).all()
+
+
+def test_paged_pool_exhaustion_truncates_not_crashes():
+    """OOP policy (optimistic admission): when the pool runs dry the
+    granting slot is force-retired with truncated=True and the engine
+    keeps serving — the freed pages fund the remaining traffic."""
+    eng = _engine(max_batch=2, page_size=8, num_pages=3,
+                  admission="optimistic")
+    eng.submit(Request(rid=0, prompt=np.arange(12) % 256, max_tokens=30))
+    eng.submit(Request(rid=1, prompt=np.arange(12) % 256, max_tokens=30))
+    done = eng.run_to_completion()
+    assert sorted(r.rid for r in done) == [0, 1]
+    assert eng.stats["oop_retired"] > 0
+    for r in done:
+        assert r.truncated
+        assert r.generated, "truncated requests keep their partial output"
+    assert eng._allocator.free_pages == eng.num_pages
+
+
+def test_paged_reserve_admission_never_truncates_feasible_requests():
+    """Default admission reserves worst-case growth: the same pressure
+    that OOP-truncates under optimistic admission instead serializes the
+    requests and serves both IN FULL."""
+    eng = _engine(max_batch=2, page_size=8, num_pages=6)
+    eng.submit(Request(rid=0, prompt=np.arange(12) % 256, max_tokens=30))
+    eng.submit(Request(rid=1, prompt=np.arange(12) % 256, max_tokens=30))
+    done = eng.run_to_completion()
+    assert sorted(r.rid for r in done) == [0, 1]
+    for r in done:
+        assert not r.truncated and r.error is None
+        assert len(r.generated) == 30
+    assert eng.stats["oop_retired"] == 0
+    assert eng._allocator.free_pages == eng.num_pages
+    assert eng._allocator.reserved == 0
+
+
+def test_paged_reserve_horizon_exact_fit():
+    """Off-by-one guard: a request whose writes fill the pool EXACTLY
+    (len + max_tokens - 1 positions; the final sampled token is never
+    written back) must be admitted and served in full, not rejected as
+    infeasible."""
+    eng = _engine(max_batch=1, page_size=8, num_pages=5)
+    # writes reach position 8 + 33 - 2 = 39 -> 40 slots = exactly 5 pages
+    eng.submit(Request(rid=0, prompt=np.arange(8) % 256, max_tokens=33))
+    done = eng.run_to_completion()
+    assert len(done) == 1
+    assert done[0].error is None and not done[0].truncated
+    assert len(done[0].generated) == 33
+
+
+def test_paged_infeasible_request_rejected_not_deadlocked():
+    """A request whose worst case can never fit the pool must be rejected
+    with ``error`` instead of waiting at the queue head forever."""
+    eng = _engine(max_batch=2, page_size=8, num_pages=2)
+    eng.submit(Request(rid=0, prompt=np.arange(30) % 256, max_tokens=30))
+    eng.submit(Request(rid=1, prompt=np.arange(5) % 256, max_tokens=3))
+    done = {r.rid: r for r in eng.run_to_completion(max_ticks=200)}
+    assert sorted(done) == [0, 1]
+    assert done[0].error is not None and done[0].generated == []
+    assert done[1].error is None and len(done[1].generated) == 3
+
+
+def test_paged_smaller_pool_smaller_footprint():
+    """The point of paging: a pool sized below max_batch*max_len shrinks
+    resident KV bytes."""
+    ring = _engine(max_batch=2, kv_mode="ring")
+    full = _engine(max_batch=2)                      # full-coverage pool
+    half = _engine(max_batch=2, num_pages=full.num_pages // 2)
+    assert half.kv_cache_bytes() < ring.kv_cache_bytes()
+    assert full.kv_cache_bytes() <= ring.kv_cache_bytes()
+
+
+def test_paged_int8_kv_matches_ring_int8():
+    """kv_bits=8 paged pools (int8 pages + scale pages) stay token-
+    identical to the int8 ring."""
+    q = QuantConfig(bits=8, kv_bits=8)
+    got = _mixed_arrival_run(_engine(max_batch=2, quant=q), n_reqs=4)
+    ref = _mixed_arrival_run(_engine(max_batch=2, quant=q, kv_mode="ring"),
+                             n_reqs=4)
+    assert got == ref
+
+
+def test_paged_no_stale_kv_across_page_reuse():
+    """Pages freed by a retired request and reallocated to a new one must
+    not leak the old KV: same-prompt output must match a fresh engine."""
+    long_prompt = (np.arange(40) * 3) % 256
+    short_prompt = (np.arange(5) * 5) % 256
+
+    eng = _engine(max_batch=1, page_size=8)
+    eng.submit(Request(rid=0, prompt=long_prompt, max_tokens=4))
+    eng.submit(Request(rid=1, prompt=short_prompt, max_tokens=4))
+    reused = {r.rid: r.generated for r in eng.run_to_completion()}
+
+    fresh = _engine(max_batch=1, page_size=8)
+    fresh.submit(Request(rid=1, prompt=short_prompt, max_tokens=4))
+    expect = {r.rid: r.generated for r in fresh.run_to_completion()}
+    assert reused[1] == expect[1]
+
+
+# ---------------------------------------------------------------------------
+# crash-on-long-prompt and silent-truncation regressions
+# ---------------------------------------------------------------------------
+
+def test_overlong_prompt_rejected_gracefully():
+    """Regression: a prompt with len >= max_len used to trip an assert in
+    the prefill path and kill the whole engine mid-tick, losing every
+    in-flight request. It must now be rejected (finished with ``error``)
+    while everything else keeps serving."""
+    eng = _engine(max_batch=2)  # max_len=64
+    eng.submit(Request(rid=0, prompt=np.arange(5) % 256, max_tokens=4))
+    eng.submit(Request(rid=1, prompt=np.arange(64) % 256, max_tokens=4))
+    eng.submit(Request(rid=2, prompt=np.arange(100) % 256, max_tokens=4))
+    eng.submit(Request(rid=3, prompt=np.arange(6) % 256, max_tokens=4))
+    done = {r.rid: r for r in eng.run_to_completion()}
+    assert sorted(done) == [0, 1, 2, 3]
+    for rid in (1, 2):
+        assert done[rid].error is not None
+        assert done[rid].generated == []
+    for rid in (0, 3):
+        assert done[rid].error is None
+        assert len(done[rid].generated) == 4
+    assert eng.stats["rejected"] == 2
+
+
+def test_overlong_prompt_rejected_per_slot_prefill_path():
+    """Same regression through the per-slot prefill path (recurrent
+    families / per_row reference mode)."""
+    eng = _engine(max_batch=2, decode_mode="per_row")
+    assert eng.kv_mode == "ring"
+    eng.submit(Request(rid=0, prompt=np.arange(70) % 256, max_tokens=3))
+    eng.submit(Request(rid=1, prompt=np.arange(4) % 256, max_tokens=3))
+    done = {r.rid: r for r in eng.run_to_completion()}
+    assert done[0].error is not None and done[0].generated == []
+    assert done[1].error is None and len(done[1].generated) == 3
+
+
+def test_forced_retirement_sets_truncated_flag():
+    """Regression: slots force-retired at cache exhaustion used to land in
+    ``finished`` indistinguishable from naturally completed requests."""
+    for kv_mode in ("paged", "ring"):
+        eng = _engine(max_batch=2, kv_mode=kv_mode)  # max_len=64
+        # rid 0 wants more tokens than the cache can hold -> truncated
+        eng.submit(Request(rid=0, prompt=np.arange(10) % 256,
+                           max_tokens=500))
+        # rid 1 finishes naturally -> not truncated
+        eng.submit(Request(rid=1, prompt=np.arange(5) % 256, max_tokens=3))
+        done = {r.rid: r for r in eng.run_to_completion()}
+        assert done[0].truncated, kv_mode
+        assert len(done[0].generated) < 500
+        assert not done[1].truncated, kv_mode
+        assert done[1].error is None
+
+
 @pytest.mark.parametrize("bits", [4, 8])
 def test_quantized_engine_close_to_fp(bits):
     """SAMD-packed serving produces (mostly) the same greedy tokens."""
