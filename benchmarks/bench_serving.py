@@ -1,24 +1,45 @@
-"""Serving throughput at mixed arrival times: paged vs ring vs per-row.
+"""Serving throughput at mixed arrival times: fused paged vs gather vs
+ring vs per-row.
 
 The serving engine's hot path is one jit-compiled position-ragged decode
-step over a PAGED KV cache (see repro/serving/engine.py). This benchmark
+step over a PAGED KV cache whose attention runs the fused Pallas
+paged-attention kernel (see repro/serving/engine.py). This benchmark
 measures end-to-end tokens/s under continuous batching with staggered
 arrivals — the traffic pattern that leaves slots at different positions
 after every refill — and compares:
 
-  * serving/paged_bf16       — fused ragged decode, paged KV (the default
-                               serving path), bf16 weights
+  * serving/paged_fused_bf16 — fused ragged decode, paged KV, Pallas
+                               paged-attention kernel (the default
+                               serving path; no gathered KV copy)
+  * serving/paged_bf16       — same, but dense per-row page GATHER before
+                               attention (the PR 2 reference path)
   * serving/ragged_ring_bf16 — fused ragged decode, PR 1 fixed per-slot
                                KV ring
-  * serving/paged_b8         — paged + SAMD 8-bit packed weights (--full)
-  * serving/paged_b4         — paged + SAMD 4-bit packed weights
+  * serving/paged_fused_b4   — fused kernel + SAMD 4-bit packed weights
+  * serving/paged_b4         — gather path + SAMD 4-bit packed weights
+  * serving/paged_b8         — gather + SAMD 8-bit weights (--full)
+  * serving/paged_fused_int8kv — fused kernel reading SAMD-packed int8 KV
+                               pages (uint32 words, lane-unpacked inside
+                               the kernel; --full)
   * serving/per_row_bf16     — the seed engine's per-row Python fallback
                                (decode_mode='per_row'; the baseline PR 1
                                killed)
 
-(The PR 1 rows serving/ragged_bf16 and serving/ragged_b4 were RENAMED when
-their backend flipped from ring to paged, so the perf-gate CI job never
-diffs a ring measurement against a paged one under a shared name.)
+Row-naming rule: when a row's MEANING changes (its backend is swapped),
+it must be RENAMED, never reused — the perf gate only ever compares like
+with like. That is why PR 1's serving/ragged_bf16 became
+serving/paged_bf16 when its backend flipped ring->paged, why the
+fused-kernel path gets NEW serving/paged_fused_* rows here while
+serving/paged_bf16 keeps measuring the gather path it always measured,
+and why the memory-check row became serving/paged_fused_halfpool_bf16
+when the engine default flipped its decode backend to the kernel.
+
+``--repeats N`` (CI uses 3) reruns each timed region N times on a warm
+engine and reports best-of-N tokens/s — the scheduler-noise floor, which
+is what the perf gate diffs. ``--check-parity`` additionally ASSERTS
+``serving/paged_fused_bf16`` >= 95% of ring throughput (the ratio is
+always printed); CI enables it on the HEAD benchmark only, so a noisy
+baseline run can never crash out and silently disable the perf gate.
 
 It then runs the paged-memory acceptance check: a workload whose summed
 prompt lengths exceed ``max_batch * max_len / 2`` must be served to
@@ -27,10 +48,11 @@ the ring cache — the resident-KV win block paging exists for. The
 comparison is asserted, not just printed.
 
 CSV columns: name, tokens_per_s, speedup_vs_per_row. The same rows (plus
-tick/call counters and resident KV bytes) are written to
-BENCH_serving.json with host info.
+per-run tokens/s, tick/call counters and resident KV bytes) are written
+to BENCH_serving.json with host info.
 
 Run:  PYTHONPATH=src python -m benchmarks.bench_serving [--full]
+          [--repeats N]
 """
 from __future__ import annotations
 
@@ -89,13 +111,19 @@ def _warm(eng, cfg, lens=(5, 12, 20)):
     (the default ``lens`` covers buckets 8/16/32 for the [4, 24) range),
     so no XLA compile lands in the timed region. One request at a time —
     a joint admission would bucket-pad them together and trace only the
-    largest shape."""
+    largest shape. A final longer decode walks the write cursor far
+    enough that every page-table width bucket the measured run can reach
+    (engine._active_table truncation) is compiled too."""
     from repro.serving import Request
 
     for j, ln in enumerate(lens):
         eng.submit(Request(rid=-1 - j, prompt=np.arange(ln) % cfg.vocab,
                            max_tokens=2))
         eng.run_to_completion()
+    eng.submit(Request(rid=-99, prompt=np.arange(lens[-1]) % cfg.vocab,
+                       max_tokens=max(2, min(32,
+                                             eng.max_len - lens[-1] - 1))))
+    eng.run_to_completion()
     eng.reset()
 
 
@@ -145,7 +173,7 @@ def paged_memory_check(cfg, max_batch: int = 4, max_len: int = 96,
     assert paged_bytes < ring_bytes, (paged_bytes, ring_bytes)
 
     return {
-        "name": "serving/paged_halfpool_bf16",
+        "name": "serving/paged_fused_halfpool_bf16",
         "tokens": tokens,
         "seconds": dt,
         "tokens_per_s": tokens / dt,
@@ -158,9 +186,20 @@ def paged_memory_check(cfg, max_batch: int = 4, max_len: int = 96,
     }
 
 
+# fused-vs-ring parity floor asserted by run(): the paged default must not
+# give back the decode-gap win the fused kernel exists to close
+PARITY_FRACTION = 0.95
+
+
 def run(quick: bool = True, max_batch: int = 4, max_len: int = 96,
-        seed: int = 0):
-    """Returns (csv_rows [(name, tokens_per_s, speedup)], json_rows)."""
+        seed: int = 0, repeats: int = 1, check_parity: bool = False):
+    """Returns (csv_rows [(name, tokens_per_s, speedup)], json_rows).
+
+    ``repeats`` > 1 reruns each ragged variant's timed region on the warm
+    engine and keeps best-of-N tokens/s (the per_row reference stays
+    single-run: its runtime is per-tick retracing, not throughput).
+    ``check_parity`` turns the printed fused-vs-ring ratio into a hard
+    assert (PARITY_FRACTION floor)."""
     from repro.quant.config import QuantConfig
     from repro.serving import ServingEngine
 
@@ -168,40 +207,69 @@ def run(quick: bool = True, max_batch: int = 4, max_len: int = 96,
     # enough decode work that each timed region is O(seconds): at ~1k tok/s
     # a 6-request burst measures ~0.05s — pure scheduler/OS noise
     n_requests = 24 if quick else 64
-    # (row suffix, decode_mode, weight bits, kv_mode)
+    # (row suffix, engine kwargs + optional weight bits / kv bits); fused
+    # is the engine default, gather rows pin the PR 2 reference backend
     variants = [
-        ("per_row_bf16", "per_row", None, "auto"),
-        ("paged_bf16", "ragged", None, "paged"),
-        ("ragged_ring_bf16", "ragged", None, "ring"),
-        ("paged_b4", "ragged", 4, "paged"),
+        ("per_row_bf16", dict(decode_mode="per_row", kv_mode="auto")),
+        ("paged_fused_bf16", dict(kv_mode="paged")),
+        ("paged_bf16", dict(kv_mode="paged", paged_attn="gather")),
+        ("ragged_ring_bf16", dict(kv_mode="ring")),
+        ("paged_fused_b4", dict(kv_mode="paged", bits=4)),
+        ("paged_b4", dict(kv_mode="paged", paged_attn="gather", bits=4)),
     ]
     if not quick:
-        variants.insert(3, ("paged_b8", "ragged", 8, "paged"))
+        variants += [
+            ("paged_b8", dict(kv_mode="paged", paged_attn="gather",
+                              bits=8)),
+            ("paged_fused_int8kv", dict(kv_mode="paged", bits=8,
+                                        kv_bits=8)),
+        ]
 
-    results = []
-    for suffix, mode, bits, kv_mode in variants:
-        quant = QuantConfig(bits=bits) if bits else None
+    # Build + warm every engine first, then INTERLEAVE the timed rounds
+    # (round 0 of every variant, then round 1, ...): a slow host phase —
+    # the dominant noise source on shared CI runners — then hits every
+    # row's round equally instead of wiping out one variant's whole
+    # best-of-N, which would fabricate a cross-variant regression.
+    prepared = []
+    for suffix, spec in variants:
+        spec = dict(spec)
+        bits = spec.pop("bits", None)
+        kv_bits = spec.pop("kv_bits", None)
+        quant = QuantConfig(bits=bits, kv_bits=kv_bits) if bits else None
+        mode = spec.pop("decode_mode", "ragged")
         eng = ServingEngine(cfg, quant=quant, max_batch=max_batch,
-                            max_len=max_len, decode_mode=mode,
-                            kv_mode=kv_mode)
+                            max_len=max_len, decode_mode=mode, **spec)
         if mode == "ragged":
             # warm the compiled steps, then measure steady-state; the
             # per-row path has no compile cache to warm (every tick traces
             # anew — that cost IS what the baseline measures).
             _warm(eng, cfg)
-        reqs = _requests(cfg.vocab, n_requests, seed)
-        t0 = time.perf_counter()
-        tokens = _serve_mixed_arrivals(eng, reqs)
-        dt = time.perf_counter() - t0
+        prepared.append((suffix, eng, mode, []))
+
+    for rep in range(repeats):
+        for suffix, eng, mode, runs in prepared:
+            if mode != "ragged" and rep > 0:
+                continue  # per_row reference stays single-run (retrace-bound)
+            if rep:
+                eng.reset()
+            reqs = _requests(cfg.vocab, n_requests, seed)
+            t0 = time.perf_counter()
+            tokens = _serve_mixed_arrivals(eng, reqs)
+            dt = time.perf_counter() - t0
+            runs.append((tokens, dt))
+
+    results = []
+    for suffix, eng, mode, runs in prepared:
+        tokens, dt = max(runs, key=lambda r: r[0] / r[1])
         results.append((f"serving/{suffix}", tokens, dt,
+                        [t / d for t, d in runs],
                         eng.kv_cache_bytes(), dict(eng.stats)))
 
-    base_tps = None
-    for name, tokens, dt, _, _ in results:
-        if name == "serving/per_row_bf16":
-            base_tps = tokens / dt
+    tps_by_name = {name: tokens / dt
+                   for name, tokens, dt, _, _, _ in results}
+    base_tps = tps_by_name.get("serving/per_row_bf16")
     csv_rows, json_rows = [], []
-    for name, tokens, dt, kv_bytes, stats in results:
+    for name, tokens, dt, run_tps, kv_bytes, stats in results:
         tps = tokens / dt
         speedup = tps / base_tps if base_tps else 0.0
         csv_rows.append((name, tps, speedup))
@@ -210,10 +278,24 @@ def run(quick: bool = True, max_batch: int = 4, max_len: int = 96,
             "tokens": tokens,
             "seconds": dt,
             "tokens_per_s": tps,
+            "tokens_per_s_runs": run_tps,
+            "repeats": len(run_tps),
             "speedup_vs_per_row": speedup,
             "kv_cache_bytes": kv_bytes,
             **stats,
         })
+
+    fused = tps_by_name["serving/paged_fused_bf16"]
+    ring = tps_by_name["serving/ragged_ring_bf16"]
+    print(f"# fused/ring parity: {fused / ring:.3f} "
+          f"(floor {PARITY_FRACTION:.2f}, "
+          f"{'enforced' if check_parity else 'informational'})")
+    if check_parity:
+        assert fused >= PARITY_FRACTION * ring, (
+            f"fused paged decode at {fused:.1f} tok/s fell below "
+            f"{PARITY_FRACTION:.0%} of ring ({ring:.1f} tok/s) — the "
+            "fused kernel must close the paged-vs-ring gap, not widen it"
+        )
 
     mem_row = paged_memory_check(cfg, max_batch=max_batch, max_len=max_len)
     csv_rows.append((mem_row["name"], mem_row["tokens_per_s"], 0.0))
@@ -225,14 +307,21 @@ def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--full", action="store_true")
     ap.add_argument("--out-dir", default=".")
+    ap.add_argument("--repeats", type=int, default=1,
+                    help="best-of-N timed runs per ragged variant "
+                         "(CI perf gate uses 3 to cut scheduler noise)")
+    ap.add_argument("--check-parity", action="store_true",
+                    help="assert paged_fused_bf16 >= 95%% of ring "
+                         "(CI enables this on the HEAD benchmark only)")
     args = ap.parse_args()
 
-    csv_rows, json_rows = run(quick=not args.full)
+    csv_rows, json_rows = run(quick=not args.full, repeats=args.repeats,
+                              check_parity=args.check_parity)
     print("name,tokens_per_s,speedup_vs_per_row")
     for name, tps, speedup in csv_rows:
         print(f"{name},{tps:.2f},{speedup:.2f}")
     mem = next(r for r in json_rows
-               if r["name"] == "serving/paged_halfpool_bf16")
+               if r["name"] == "serving/paged_fused_halfpool_bf16")
     print(f"# paged resident KV {mem['paged_kv_bytes']} B vs ring "
           f"{mem['ring_kv_bytes']} B "
           f"(ratio {mem['kv_bytes_ratio']:.2f}) serving "

@@ -24,7 +24,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs.vggb import VGGB_LAYERS
-from repro.core import codegen, conv as cconv, overflow
+from repro.core import conv as cconv, overflow
 from repro.core.samd import scale_format
 
 REPEATS = 5

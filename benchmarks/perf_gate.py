@@ -1,7 +1,9 @@
 """Perf-regression gate: diff BENCH_*.json artifacts between two commits.
 
 CI runs the serving benchmark twice on the same runner — once at the
-previous commit, once at HEAD — and this gate fails (exit 1) if any row
+previous commit, once at HEAD, each timed region best-of-N (the
+benchmark's ``--repeats``, 3 in CI) so a single scheduler hiccup cannot
+manufacture a regression — and this gate fails (exit 1) if any row
 shared by both artifacts regressed ``tokens_per_s`` by more than the
 threshold (default 20%). Rows present in only one artifact (new or
 renamed benchmarks) are reported but never fail the gate; a missing
@@ -15,8 +17,13 @@ When a benchmark's MEANING changes (e.g. a row's backend is swapped),
 rename the row rather than reusing the name: the gate must only ever
 compare like with like.
 
+Besides the console report, the gate renders a baseline-vs-head markdown
+table. Inside GitHub Actions it is appended to ``$GITHUB_STEP_SUMMARY``
+automatically, so every run page shows the comparison without digging
+through logs (``--summary PATH`` writes it anywhere else).
+
 Run:  python -m benchmarks.perf_gate --baseline old/BENCH_serving.json \
-          --current BENCH_serving.json [--threshold 0.20]
+          --current BENCH_serving.json [--threshold 0.20] [--summary md]
 """
 from __future__ import annotations
 
@@ -38,35 +45,92 @@ def load_rows(path: str, metric: str) -> dict:
     return out
 
 
+def classify(baseline: dict, current: dict, threshold: float,
+             exclude: tuple = ()):
+    """One record per row: (name, base, cur, ratio, verdict). The SINGLE
+    source of the gate's row classification — the console report, the
+    exit code, and the markdown step summary all render from these, so
+    they can never disagree.
+
+    Verdicts: 'excluded' (name matches an ``exclude`` substring), 'new' /
+    'removed' (present in only one artifact — reported, never gated),
+    'REGRESSION' (cur < base * (1 - threshold); higher is better), 'OK'.
+    """
+    records = []
+    for name in sorted(set(baseline) | set(current)):
+        base, cur = baseline.get(name), current.get(name)
+        if any(pat in name for pat in exclude):
+            verdict, ratio = "excluded", None
+        elif base is None:
+            verdict, ratio = "new", None
+        elif cur is None:
+            verdict, ratio = "removed", None
+        else:
+            ratio = cur / base if base else float("inf")
+            verdict = ("REGRESSION" if cur < base * (1.0 - threshold)
+                       else "OK")
+        records.append((name, base, cur, ratio, verdict))
+    return records
+
+
 def compare(baseline: dict, current: dict, threshold: float,
             exclude: tuple = ()):
-    """Returns (report_lines, regressions) for name->value dicts.
+    """Returns (report_lines, regressions) rendered from ``classify``.
 
     A row regresses when current < baseline * (1 - threshold). Higher is
     assumed better (tokens/s). Rows whose name contains any ``exclude``
     substring are skipped."""
     lines, regressions = [], []
-    for name in sorted(set(baseline) | set(current)):
-        if any(pat in name for pat in exclude):
+    for name, base, cur, ratio, verdict in classify(baseline, current,
+                                                    threshold, exclude):
+        if verdict == "excluded":
             lines.append(f"  {name}: excluded")
-            continue
-        if name not in current:
+        elif verdict == "new":
+            lines.append(f"  {name}: new ({cur:.2f}) — ignored")
+        elif verdict == "removed":
             lines.append(f"  {name}: removed (baseline "
-                         f"{baseline[name]:.2f}) — ignored")
-            continue
-        if name not in baseline:
-            lines.append(f"  {name}: new ({current[name]:.2f}) — ignored")
-            continue
-        base, cur = baseline[name], current[name]
-        ratio = cur / base if base else float("inf")
-        verdict = "OK"
-        if cur < base * (1.0 - threshold):
-            verdict = "REGRESSION"
-            regressions.append((name, base, cur, ratio))
-        lines.append(
-            f"  {name}: {base:.2f} -> {cur:.2f} ({ratio:.2%}) {verdict}"
-        )
+                         f"{base:.2f}) — ignored")
+        else:
+            if verdict == "REGRESSION":
+                regressions.append((name, base, cur, ratio))
+            lines.append(
+                f"  {name}: {base:.2f} -> {cur:.2f} ({ratio:.2%}) {verdict}"
+            )
     return lines, regressions
+
+
+def markdown_report(baseline: dict, current: dict, threshold: float,
+                    exclude: tuple = ()) -> list[str]:
+    """Baseline-vs-head comparison as GitHub-flavored markdown lines,
+    rendered from the same ``classify`` records as the console gate."""
+    md = [
+        f"### perf gate — tokens/s, threshold {threshold:.0%}",
+        "",
+        "| row | baseline | head | ratio | verdict |",
+        "| --- | ---: | ---: | ---: | --- |",
+    ]
+    pretty = {"new": "new — ignored", "removed": "removed — ignored",
+              "REGRESSION": "**REGRESSION**"}
+    for name, base, cur, ratio, verdict in classify(baseline, current,
+                                                    threshold, exclude):
+        md.append(
+            f"| {name} "
+            f"| {'' if base is None else f'{base:.2f}'} "
+            f"| {'' if cur is None else f'{cur:.2f}'} "
+            f"| {'' if ratio is None else f'{ratio:.2%}'} "
+            f"| {pretty.get(verdict, verdict)} |"
+        )
+    return md
+
+
+def _write_summary(md_lines: list[str], path: str | None) -> None:
+    """Append the markdown report to ``path`` or, inside GitHub Actions,
+    to the run page's step summary."""
+    path = path or os.environ.get("GITHUB_STEP_SUMMARY")
+    if not path:
+        return
+    with open(path, "a") as f:
+        f.write("\n".join(md_lines) + "\n")
 
 
 def main(argv=None) -> int:
@@ -80,18 +144,31 @@ def main(argv=None) -> int:
     ap.add_argument("--exclude", action="append", default=None,
                     help="skip rows whose name contains this substring "
                          "(repeatable; default: per_row)")
+    ap.add_argument("--summary", default=None,
+                    help="append a markdown comparison table to this file "
+                         "(defaults to $GITHUB_STEP_SUMMARY when set)")
     args = ap.parse_args(argv)
     exclude = tuple(args.exclude) if args.exclude else ("per_row",)
 
     if not os.path.exists(args.baseline):
         print(f"perf_gate: no baseline at {args.baseline} "
               "(first run?) — passing")
+        _write_summary(
+            ["### perf gate", "",
+             f"no baseline artifact at `{args.baseline}` — gate passed "
+             "without a comparison"],
+            args.summary,
+        )
         return 0
     baseline = load_rows(args.baseline, args.metric)
     current = load_rows(args.current, args.metric)
     lines, regressions = compare(baseline, current, args.threshold, exclude)
     print(f"perf_gate: {args.metric}, threshold {args.threshold:.0%}")
     print("\n".join(lines))
+    _write_summary(
+        markdown_report(baseline, current, args.threshold, exclude),
+        args.summary,
+    )
     if regressions:
         print(f"perf_gate: FAIL — {len(regressions)} row(s) regressed "
               f"more than {args.threshold:.0%}")

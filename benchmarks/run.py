@@ -30,7 +30,6 @@ bit widths 8..2).
 from __future__ import annotations
 
 import argparse
-import sys
 import time
 
 import jax

@@ -15,7 +15,6 @@ import dataclasses
 from typing import Callable, Optional
 
 import jax
-import jax.numpy as jnp
 import numpy as np
 
 from repro.core import conv as conv_mod

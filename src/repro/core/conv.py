@@ -32,7 +32,6 @@ import dataclasses
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 from repro.core import masks
 from repro.core.samd import (
@@ -42,7 +41,6 @@ from repro.core.samd import (
     mul_wide_u32,
     pack,
     sign_extend_for_mul,
-    word_dtype,
 )
 
 

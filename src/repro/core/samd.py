@@ -20,7 +20,6 @@ from typing import Literal
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 from repro.core import masks
 

@@ -17,7 +17,6 @@ Rules (baseline):
 """
 from __future__ import annotations
 
-from typing import Optional
 
 import jax
 import numpy as np

@@ -6,13 +6,11 @@ Mosaic on a real TPU.
 """
 from __future__ import annotations
 
-import functools
-
 import jax
-import jax.numpy as jnp
 
 from repro.core.conv import ConvPlan, overlap_add, pack_conv_kernel, pack_conv_operand
 from repro.quant.config import QuantConfig
+from repro.kernels import paged_attention as _pa
 from repro.kernels import samd_conv as _conv
 from repro.kernels import samd_matmul as _mm
 
@@ -35,6 +33,41 @@ def samd_matmul(x: jax.Array, packed: jax.Array, scale: jax.Array, k: int,
         interpret=interpret,
     )
     return out.reshape(lead + (out.shape[-1],))
+
+
+def paged_decode_attention(q: jax.Array, k_pages: jax.Array,
+                           v_pages: jax.Array, page_table: jax.Array,
+                           q_pos: jax.Array, *,
+                           k_scale: jax.Array | None = None,
+                           v_scale: jax.Array | None = None,
+                           block_kv_heads: int | None = None,
+                           interpret: bool | None = None) -> jax.Array:
+    """Fused decode attention over the paged KV pool (no gathered copy).
+
+    q [B, H, dh] -> [B, H, dh]. Pools are bf16/f32 pages, or SAMD-packed
+    uint32 pages (+ per-(token, head) scales) unpacked inside the kernel.
+
+    Backend dispatch differs from the other kernels here: on TPU the
+    Pallas kernel compiles to Mosaic, but on CPU the default is the
+    unrolled-jnp lowering of the same page-loop algorithm rather than
+    the Pallas interpreter — the interpreter walks the (slot, page) grid
+    sequentially, which costs more than the gather this kernel replaces,
+    while the unrolled lowering vectorizes across slots. Pass
+    ``interpret=True`` to force the Pallas interpreter (the CI
+    equivalence tests do, so the kernel body itself stays covered).
+    """
+    if interpret is None:
+        if _default_interpret():
+            return _pa.paged_decode_attention_xla(
+                q, k_pages, v_pages, page_table, q_pos,
+                k_scale=k_scale, v_scale=v_scale,
+            )
+        interpret = False
+    return _pa.paged_decode_attention(
+        q, k_pages, v_pages, page_table, q_pos,
+        k_scale=k_scale, v_scale=v_scale, block_kv_heads=block_kv_heads,
+        interpret=interpret,
+    )
 
 
 def samd_conv1d(x: jax.Array, kernel: jax.Array, plan: ConvPlan,

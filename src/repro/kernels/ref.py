@@ -6,7 +6,7 @@ import jax.numpy as jnp
 
 from repro.core.conv import ConvPlan
 from repro.quant.config import QuantConfig
-from repro.quant.packing import dequant_weights
+from repro.quant.packing import dequant_weights, unpack_int8_lanes
 
 
 def samd_matmul_ref(x: jax.Array, packed: jax.Array, scale: jax.Array,
@@ -14,6 +14,52 @@ def samd_matmul_ref(x: jax.Array, packed: jax.Array, scale: jax.Array,
     """Unpack the whole weight and matmul at once."""
     w = dequant_weights(packed, scale, k, cfg, dtype=x.dtype)
     return jnp.matmul(x, w)
+
+
+def paged_attention_ref(q: jax.Array, k_pages: jax.Array,
+                        v_pages: jax.Array, page_table: jax.Array,
+                        q_pos: jax.Array, k_scale=None,
+                        v_scale=None) -> jax.Array:
+    """Gather-then-attend oracle with ``layers._paged_gather`` /
+    ``_paged_key_positions`` semantics: each row's pages are copied into a
+    dense [n_pp * page_size] view, unallocated blocks are masked via
+    derived key positions, softmax runs in f32 over the whole view. This
+    is exactly the dense copy the fused kernel exists to delete."""
+    b, n_pp = page_table.shape
+    p, page_size, hkv = k_pages.shape[:3]
+    h = q.shape[1]
+    g = h // hkv
+
+    safe = jnp.clip(page_table.astype(jnp.int32), 0, p - 1).reshape(-1)
+
+    def gather(pool, scale):
+        gathered = jnp.take(pool, safe, axis=0).reshape(
+            (b, n_pp * page_size) + pool.shape[2:]
+        )
+        if pool.dtype == jnp.uint32:
+            gathered = unpack_int8_lanes(gathered).astype(jnp.float32)
+            gathered = gathered * jnp.take(scale, safe, axis=0).reshape(
+                b, n_pp * page_size, hkv
+            )[..., None]
+        return gathered.astype(jnp.float32)
+
+    kg = gather(k_pages, k_scale)
+    vg = gather(v_pages, v_scale)
+
+    iota = jnp.arange(n_pp * page_size, dtype=jnp.int32)[None, :]
+    valid = jnp.repeat(page_table >= 0, page_size, axis=1)
+    k_pos = jnp.where(valid, iota, -1)
+
+    qg = q.reshape(b, hkv, g, -1).astype(jnp.float32)
+    scale = 1.0 / (q.shape[-1] ** 0.5)
+    s = jnp.einsum("bhgd,bshd->bhgs", qg, kg) * scale
+    mask = (k_pos[:, None, None, :] >= 0) & (
+        k_pos[:, None, None, :] <= q_pos[:, None, None, None]
+    )
+    s = jnp.where(mask, s, -1e30)
+    probs = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bhgs,bshd->bhgd", probs, vg)
+    return out.reshape(b, h, -1).astype(q.dtype)
 
 
 def samd_conv_chunks_ref(x_words: jax.Array, k_word: jax.Array,

@@ -21,8 +21,6 @@ from __future__ import annotations
 
 import dataclasses
 
-import numpy as np
-
 from repro.configs.base import ArchConfig, ShapeConfig
 from repro.models.ssm import mamba2_dims, rwkv6_dims
 

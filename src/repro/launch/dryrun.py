@@ -13,8 +13,6 @@ Usage:
   PYTHONPATH=src python -m repro.launch.dryrun --all --both-meshes --out artifacts/
 """
 import argparse      # noqa: E402
-import dataclasses   # noqa: E402
-import functools     # noqa: E402
 import json          # noqa: E402
 import time          # noqa: E402
 import traceback     # noqa: E402
@@ -26,7 +24,7 @@ from jax.sharding import NamedSharding, PartitionSpec as P  # noqa: E402
 
 from repro.configs import ARCHS, SHAPES, RunConfig, get_arch  # noqa: E402
 from repro.distributed.sharding import (  # noqa: E402
-    batch_pspec, cache_pspecs, data_pspec, param_pspecs,
+    cache_pspecs, data_pspec, param_pspecs,
 )
 from repro.launch.analytic_costs import cell_cost  # noqa: E402
 from repro.launch import steps as steps_mod  # noqa: E402
@@ -37,7 +35,6 @@ from repro.launch.mesh import make_production_mesh  # noqa: E402
 from repro.models import (  # noqa: E402
     build_template, param_count, quantized_spec_tree, shape_dtype_from_spec,
 )
-from repro.models.layers import QuantizedTensor  # noqa: E402
 from repro.models.spec import TensorSpec  # noqa: E402
 from repro.optim.adamw import AdamWState  # noqa: E402
 from repro.quant.config import QuantConfig  # noqa: E402

@@ -57,7 +57,7 @@ def make_train_step(cfg: ArchConfig, run: RunConfig):
                     lambda x: jax.lax.dynamic_slice_in_dim(x, i * mb, mb, 0),
                     batch,
                 )
-                (l, raw), g = jax.value_and_grad(loss_fn, has_aux=True)(
+                (_, raw), g = jax.value_and_grad(loss_fn, has_aux=True)(
                     params, sl
                 )
                 acc_g, acc_l = acc
@@ -75,7 +75,7 @@ def make_train_step(cfg: ArchConfig, run: RunConfig):
             )
             grads = jax.tree.map(lambda g: g / run.grad_accum, gsum)
         else:
-            (l, loss), grads = jax.value_and_grad(loss_fn, has_aux=True)(
+            (_, loss), grads = jax.value_and_grad(loss_fn, has_aux=True)(
                 params, batch
             )
 
@@ -171,7 +171,8 @@ def make_ragged_serve_step(cfg: ArchConfig, run: RunConfig):
 
 
 def make_paged_ragged_serve_step(cfg: ArchConfig, run: RunConfig,
-                                 page_size: int):
+                                 page_size: int,
+                                 paged_attn: str = "fused"):
     """Position-ragged decode against the PAGED KV pool.
 
     Same contract as ``make_ragged_serve_step`` plus a ``page_table``
@@ -180,8 +181,14 @@ def make_paged_ragged_serve_step(cfg: ArchConfig, run: RunConfig,
     the (page, offset) generalization of the ragged (row, offset) scatter.
     Rows whose page-table row is all -1 (inactive slots) write nowhere and
     read an all-masked key set, so no reset of retired slots is needed.
+
+    ``paged_attn="fused"`` (the serving default) attends per page through
+    the Pallas paged-attention kernel — no [B, max_len] gathered KV copy
+    inside the step; ``"gather"`` keeps the dense page gather as the
+    token-identity reference path.
     """
     max_len = run.shape.seq_len
+    assert paged_attn in ("fused", "gather"), paged_attn
 
     def paged_ragged_serve_step(params, tokens, cache, positions, active,
                                 page_table, key, temperature):
@@ -190,6 +197,7 @@ def make_paged_ragged_serve_step(cfg: ArchConfig, run: RunConfig,
             params, tokens, cfg,
             positions=pos[:, None], cache=cache,
             page_table=page_table, page_size=page_size,
+            paged_attn=paged_attn,
         )
         next_tok = sample_tokens(logits[:, -1], key, temperature)
         return jnp.where(active, next_tok, -1), new_cache

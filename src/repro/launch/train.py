@@ -25,9 +25,8 @@ import time
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
-from repro.configs import ARCHS, RunConfig, SHAPES, get_arch, smoke_config
+from repro.configs import ARCHS, RunConfig, get_arch, smoke_config
 from repro.configs.base import ShapeConfig
 from repro.checkpoint import CheckpointManager
 from repro.data import SyntheticLM

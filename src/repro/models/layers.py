@@ -14,14 +14,13 @@ Design notes:
 from __future__ import annotations
 
 import dataclasses
-import functools
-from typing import Optional
 
 import jax
 import jax.numpy as jnp
 
+from repro.kernels import ops as kernel_ops
 from repro.quant.config import QuantConfig
-from repro.quant.packing import qmatmul
+from repro.quant.packing import pack_int8_lanes, qmatmul, unpack_int8_lanes
 
 
 # ---------------------------------------------------------------------------
@@ -119,6 +118,14 @@ def _attend_chunk(q, k, v, q_pos, k_pos, scale):
     """q [B,Cq,Hkv,G,dh]; k/v [B,S,Hkv,dh] -> [B,Cq,Hkv,G,dh].
 
     Masks keys with k_pos > q_pos (causal) or k_pos < 0 (unfilled cache).
+
+    Probs stay f32 through the PV product (rounding only the output):
+    the fused paged-attention kernel accumulates in f32, so greedy
+    token-identity between the serving paths needs matching precision
+    here — and it must hold UNCONDITIONALLY, not per call site: the
+    cached-decode-vs-full-forward consistency check (test_models.
+    test_decode_consistency at 1e-3) fails if cached and uncached
+    attention round at different points.
     """
     scores = jnp.einsum(
         "bqhgd,bshd->bhgqs", q, k, preferred_element_type=jnp.float32
@@ -129,8 +136,8 @@ def _attend_chunk(q, k, v, q_pos, k_pos, scale):
     )
     scores = jnp.where(mask, scores, -1e30)
     probs = jax.nn.softmax(scores, axis=-1)
-    out = jnp.einsum("bhgqs,bshd->bqhgd", probs.astype(v.dtype), v)
-    return out
+    out = jnp.einsum("bhgqs,bshd->bqhgd", probs, v.astype(jnp.float32))
+    return out.astype(v.dtype)
 
 
 def attention(
@@ -277,6 +284,7 @@ def attention_block(
     cache_index=None,        # cache write offset: scalar, or [B] per-row
     page_table=None,         # [B, n_pp] int32: paged KV (pool-shaped cache)
     page_size: int = 0,
+    paged_attn: str = "gather",  # "fused" (Pallas kernel) | "gather" (ref)
     chunk: int = 1024,
 ):
     """Full attention sub-block: norm -> qkv -> rope -> attend -> out.
@@ -292,9 +300,15 @@ def attention_block(
     [P, page_size, ...] instead of per-slot rings [B, T, ...]: writes
     scatter through the table at each token's logical position (the
     ``(page, offset)`` generalization of the ragged ``(row, offset)``
-    writes) and the attention keys are gathered back per row in logical
-    order. ``cache_index`` is ignored — ``positions`` already names every
-    written token's offset.
+    writes). ``cache_index`` is ignored — ``positions`` already names
+    every written token's offset. With ``paged_attn="fused"`` (decode
+    only, S == 1) attention runs the Pallas paged-attention kernel
+    straight off the pool — no gathered [B, n_pp * page_size] copy;
+    ``paged_attn="gather"`` keeps the per-row page gather as the
+    reference path (and serves prefill, whose queries span many
+    positions). Quantized pools (``kv_bits=8``) are stored SAMD-packed:
+    uint32 words of four int8 lanes along head_dim, unpacked lane-wise
+    inside the kernel (fused) or after the gather (reference).
     """
     b, s, d = x.shape
     h, hkv, dh = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
@@ -318,7 +332,8 @@ def attention_block(
 
     new_cache = None
     if kv_cache is not None:
-        quantized_kv = kv_cache["k"].dtype == jnp.int8
+        # int8 ring rows, or SAMD-packed uint32 page pools (kv_bits=8)
+        quantized_kv = kv_cache["k"].dtype in (jnp.int8, jnp.uint32)
 
         def _quant(t):
             """int8 cache write: per-(token, kv-head) symmetric scale —
@@ -332,30 +347,21 @@ def attention_block(
             return qv, scale
 
         if page_table is not None:
-            k_pos = _paged_key_positions(page_table, page_size)
             if quantized_kv:
                 kq, ks = _quant(k)
                 vq, vs = _quant(v)
+                # SAMD-pack the int8 lanes into uint32 words along head_dim
+                # BEFORE the scatter: the pool only ever holds packed words
                 new_cache = {
-                    "k": _paged_write(kv_cache["k"], kq, page_table,
-                                      positions, page_size),
-                    "v": _paged_write(kv_cache["v"], vq, page_table,
-                                      positions, page_size),
+                    "k": _paged_write(kv_cache["k"], pack_int8_lanes(kq),
+                                      page_table, positions, page_size),
+                    "v": _paged_write(kv_cache["v"], pack_int8_lanes(vq),
+                                      page_table, positions, page_size),
                     "k_scale": _paged_write(kv_cache["k_scale"], ks,
                                             page_table, positions, page_size),
                     "v_scale": _paged_write(kv_cache["v_scale"], vs,
                                             page_table, positions, page_size),
                 }
-                kg = _paged_gather(new_cache["k"], page_table, page_size)
-                vg = _paged_gather(new_cache["v"], page_table, page_size)
-                ksg = _paged_gather(new_cache["k_scale"], page_table,
-                                    page_size)
-                vsg = _paged_gather(new_cache["v_scale"], page_table,
-                                    page_size)
-                k_full = (kg.astype(jnp.float32)
-                          * ksg[..., None]).astype(q.dtype)
-                v_full = (vg.astype(jnp.float32)
-                          * vsg[..., None]).astype(q.dtype)
             else:
                 new_cache = {
                     "k": _paged_write(kv_cache["k"], k, page_table,
@@ -363,11 +369,35 @@ def attention_block(
                     "v": _paged_write(kv_cache["v"], v, page_table,
                                       positions, page_size),
                 }
-                k_full = _paged_gather(
-                    new_cache["k"], page_table, page_size).astype(q.dtype)
-                v_full = _paged_gather(
-                    new_cache["v"], page_table, page_size).astype(q.dtype)
-            att = attention(q, k_full, v_full, positions, k_pos, chunk=chunk)
+            if paged_attn == "fused" and s == 1:
+                # decode hot path: attend per page straight off the pool —
+                # the [B, n_pp * page_size] gathered copy never exists
+                att = kernel_ops.paged_decode_attention(
+                    q[:, 0], new_cache["k"], new_cache["v"], page_table,
+                    positions[:, 0],
+                    k_scale=new_cache.get("k_scale"),
+                    v_scale=new_cache.get("v_scale"),
+                )[:, None]
+            else:
+                k_pos = _paged_key_positions(page_table, page_size)
+                if quantized_kv:
+                    kg = _paged_gather(new_cache["k"], page_table, page_size)
+                    vg = _paged_gather(new_cache["v"], page_table, page_size)
+                    ksg = _paged_gather(new_cache["k_scale"], page_table,
+                                        page_size)
+                    vsg = _paged_gather(new_cache["v_scale"], page_table,
+                                        page_size)
+                    k_full = (unpack_int8_lanes(kg).astype(jnp.float32)
+                              * ksg[..., None]).astype(q.dtype)
+                    v_full = (unpack_int8_lanes(vg).astype(jnp.float32)
+                              * vsg[..., None]).astype(q.dtype)
+                else:
+                    k_full = _paged_gather(
+                        new_cache["k"], page_table, page_size).astype(q.dtype)
+                    v_full = _paged_gather(
+                        new_cache["v"], page_table, page_size).astype(q.dtype)
+                att = attention(q, k_full, v_full, positions, k_pos,
+                                chunk=chunk)
         elif quantized_kv:
             kq, ks = _quant(k)
             vq, vs = _quant(v)

@@ -9,7 +9,6 @@ derived from the same source of truth.
 from __future__ import annotations
 
 import contextvars
-import dataclasses
 from typing import Optional
 
 import jax
@@ -322,9 +321,14 @@ def init_paged_cache(cfg: ArchConfig, num_pages: int, page_size: int,
     def kv_pool():
         shape = (num_pages, page_size, cfg.n_kv_heads, cfg.head_dim)
         if kv_bits == 8:
+            # SAMD-packed int8 pages: uint32 words of four 8-bit lanes
+            # along head_dim (same bytes as int8, but the paged-attention
+            # kernel reads whole words and unpacks lanes on the VPU)
+            assert cfg.head_dim % 4 == 0, cfg.head_dim
+            packed = shape[:3] + (cfg.head_dim // 4,)
             return {
-                "k": jnp.zeros(shape, jnp.int8),
-                "v": jnp.zeros(shape, jnp.int8),
+                "k": jnp.zeros(packed, jnp.uint32),
+                "v": jnp.zeros(packed, jnp.uint32),
                 "k_scale": jnp.zeros(shape[:3], jnp.float32),
                 "v_scale": jnp.zeros(shape[:3], jnp.float32),
             }
@@ -348,7 +352,8 @@ def init_paged_cache(cfg: ArchConfig, num_pages: int, page_size: int,
 # ---------------------------------------------------------------------------
 
 def _scan_blocks(params, x, positions, cfg, remat, cache=None,
-                 cache_index=0, page_table=None, page_size=0):
+                 cache_index=0, page_table=None, page_size=0,
+                 paged_attn="gather"):
     """lax.scan over stacked layer params (compile time O(1) in depth).
 
     remat='block' composes naturally: jax.checkpoint wraps the scan body,
@@ -370,7 +375,7 @@ def _scan_blocks(params, x, positions, cfg, remat, cache=None,
                 p["attn"], xc, positions, cfg,
                 kv_cache=kv_c, cache_index=cache_index,
                 page_table=page_table, page_size=page_size,
-                chunk=cfg.attn_chunk,
+                paged_attn=paged_attn, chunk=cfg.attn_chunk,
             )
             xc = xc + delta
             return _constrain(xc + L.mlp_block(p["mlp"], xc, cfg)), new_kv
@@ -387,7 +392,7 @@ def _scan_blocks(params, x, positions, cfg, remat, cache=None,
                 p["attn"], xc, positions, cfg,
                 kv_cache=kv_c, cache_index=cache_index,
                 page_table=page_table, page_size=page_size,
-                chunk=cfg.attn_chunk,
+                paged_attn=paged_attn, chunk=cfg.attn_chunk,
             )
             xc = xc + delta
             mo, a = L.moe_block(p["moe"], xc, cfg,
@@ -454,6 +459,7 @@ def forward(
     cache_index=0,
     page_table: Optional[jax.Array] = None,
     page_size: int = 0,
+    paged_attn: str = "gather",
     prefix_embeds: Optional[jax.Array] = None,
     remat: bool = False,
 ):
@@ -462,6 +468,9 @@ def forward(
     ``page_table`` [B, n_pp] switches attention KV caching to the paged
     pool layout (``init_paged_cache``); ``cache_index`` is then unused —
     every token's cache slot is derived from its logical position.
+    ``paged_attn="fused"`` runs single-token decode attention through the
+    Pallas paged-attention kernel (no gathered KV copy); ``"gather"``
+    keeps the dense per-row page gather as the reference path.
     """
     b, s = tokens.shape
     # gather THEN cast: the backward scatter-add into the embedding table
@@ -484,7 +493,7 @@ def forward(
         )
         x, aux_total, new_stacked = _scan_blocks(
             params, x, positions, cfg, remat, cache, cache_index,
-            page_table, page_size,
+            page_table, page_size, paged_attn,
         )
         x = L.rms_norm(x, params["final_ln"], cfg.norm_eps)
         if cfg.tie_embeddings:
@@ -503,7 +512,7 @@ def forward(
             p["attn"], x, positions, cfg,
             kv_cache=kv_c, cache_index=cache_index,
             page_table=page_table, page_size=page_size,
-            chunk=cfg.attn_chunk,
+            paged_attn=paged_attn, chunk=cfg.attn_chunk,
         )
         x = x + delta
         x = x + L.mlp_block(p["mlp"], x, cfg)
@@ -514,7 +523,7 @@ def forward(
             p["attn"], x, positions, cfg,
             kv_cache=kv_c, cache_index=cache_index,
             page_table=page_table, page_size=page_size,
-            chunk=cfg.attn_chunk,
+            paged_attn=paged_attn, chunk=cfg.attn_chunk,
         )
         x = x + delta
         mo, aux = L.moe_block(p["moe"], x, cfg,

@@ -132,7 +132,10 @@ def mamba2_block(p: dict, x: jax.Array, cfg, state: dict | None = None):
     else:
         pad = (-t) % 128
         if pad:
-            padf = lambda a: jnp.pad(a, [(0, 0), (0, pad)] + [(0, 0)] * (a.ndim - 2))
+            def padf(a):
+                return jnp.pad(
+                    a, [(0, 0), (0, pad)] + [(0, 0)] * (a.ndim - 2)
+                )
             ys, s1 = ssd_chunked(
                 padf(xdt), padf(bmat), padf(cmat), padf(loga), s0
             )
@@ -182,7 +185,8 @@ def wkv6_chunked(r, k, v, logw, u, s0, chunk: int = 32):
     c = min(chunk, t)
     pad = (-t) % c
     if pad:  # logw=0 padding is state-neutral (decay 1, zero k/v/r)
-        pf = lambda a: jnp.pad(a, [(0, 0), (0, pad), (0, 0), (0, 0)])
+        def pf(a):
+            return jnp.pad(a, [(0, 0), (0, pad), (0, 0), (0, 0)])
         r, k, v, logw = pf(r), pf(k), pf(v), pf(logw)
     tt = t + pad
     nc = tt // c

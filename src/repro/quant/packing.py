@@ -63,6 +63,29 @@ def dequant_weights(packed: jax.Array, scale: jax.Array, k: int,
     return (q.astype(jnp.float32) * scale).astype(dtype)
 
 
+def pack_int8_lanes(vals: jax.Array) -> jax.Array:
+    """int8 [..., D] -> uint32 [..., D//4]: four 8-bit lanes per word along
+    the trailing axis. This is the SAMD storage format of the paged KV pool
+    (b=8, lane_width=8, word_bits=32): quantized K/V stay packed in HBM and
+    are unpacked lane-wise inside the paged-attention kernel."""
+    d = vals.shape[-1]
+    assert d % 4 == 0, f"trailing dim {d} must pack into whole uint32 words"
+    u = (vals.astype(jnp.int32) & 0xFF).astype(jnp.uint32)
+    u = u.reshape(vals.shape[:-1] + (d // 4, 4))
+    shifts = jnp.arange(4, dtype=jnp.uint32) * jnp.uint32(8)
+    return jnp.sum(u << shifts, axis=-1, dtype=jnp.uint32)
+
+
+def unpack_int8_lanes(words: jax.Array) -> jax.Array:
+    """uint32 [..., W] -> sign-extended int32 [..., W*4] (inverse of
+    ``pack_int8_lanes``). One broadcasted shift/mask chain over the four
+    lanes — the same vectorized idiom the samd_matmul kernel uses."""
+    shifts = jnp.arange(4, dtype=jnp.uint32) * jnp.uint32(8)
+    v = ((words[..., None] >> shifts) & jnp.uint32(0xFF)).astype(jnp.int32)
+    v = v - ((v >> 7) & 1) * 256
+    return v.reshape(words.shape[:-1] + (words.shape[-1] * 4,))
+
+
 def qmatmul(x: jax.Array, packed: jax.Array, scale: jax.Array, k: int,
             cfg: QuantConfig, precision=None) -> jax.Array:
     """x[..., K] @ dequant(packed)[K, N] with backend dispatch."""

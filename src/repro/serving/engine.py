@@ -31,8 +31,17 @@ Scheduling model (this module's contract):
 
 Paged KV contract (``kv_mode="paged"``, the default for attention
 families under ragged decode):
+  * decode attention runs the FUSED Pallas paged-attention kernel by
+    default (``paged_attn="fused"``): the step attends straight off the
+    page pool through the page table with an online-softmax accumulator,
+    so the per-tick [B, max_len] gathered KV copy of the old path never
+    materializes. ``paged_attn="gather"`` keeps that dense gather as the
+    token-identity reference path (prefill always gathers — its queries
+    span many positions);
   * each attention layer owns a pool of ``num_pages`` KV pages of
-    ``page_size`` tokens (int8-quantized pages when ``quant.kv_bits=8``);
+    ``page_size`` tokens (SAMD-packed uint32 pages — four int8 lanes per
+    head_dim word, unpacked lane-wise inside the kernel — when
+    ``quant.kv_bits=8``);
     resident KV memory is ``num_pages * page_size`` tokens per layer, NOT
     ``max_batch * max_len`` — long and short requests share the pool;
   * allocation lifecycle: admission takes ``ceil(len(prompt)/page_size)``
@@ -172,9 +181,11 @@ class ServingEngine:
                  kv_mode: str = "auto",
                  page_size: int = 16,
                  num_pages: Optional[int] = None,
-                 admission: str = "reserve"):
+                 admission: str = "reserve",
+                 paged_attn: str = "fused"):
         assert decode_mode in ("ragged", "per_row"), decode_mode
         assert admission in ("reserve", "optimistic"), admission
+        assert paged_attn in ("fused", "gather"), paged_attn
         # paged KV needs the batched admission path and pool-shaped cache
         # inside the fused steps; the per-row reference path slices per-slot
         # cache rows and recurrent families have O(1) state — both fall
@@ -197,6 +208,7 @@ class ServingEngine:
         self.decode_mode = decode_mode
         self.kv_mode = kv_mode
         self.admission = admission
+        self.paged_attn = paged_attn
         self.page_size = page_size
         self.pages_per_slot = -(-max_len // page_size)
         if num_pages is None:
@@ -219,7 +231,8 @@ class ServingEngine:
                         quant=self.quant)
         if kv_mode == "paged":
             self._ragged_step = jax.jit(
-                steps_mod.make_paged_ragged_serve_step(cfg, run, page_size),
+                steps_mod.make_paged_ragged_serve_step(
+                    cfg, run, page_size, paged_attn=paged_attn),
                 donate_argnums=(2,),
             )
         else:
@@ -369,10 +382,14 @@ class ServingEngine:
             lens_a[row] = lens[row]
             valid[row] = True
         if self.kv_mode == "paged":
-            # rows write through their target slot's page table
-            route = np.full((nb, self.pages_per_slot), -1, np.int32)
+            # rows write through their target slot's page table, truncated
+            # to the admitted batch's used page columns (pow2-bucketed like
+            # the decode table — prefill attention work then scales with
+            # the prompts' pages, not pages_per_slot)
+            width = self._pow2_width(-(-max(lens) // self.page_size))
+            route = np.full((nb, width), -1, np.int32)
             for row, slot in enumerate(slots):
-                route[row] = self.page_table[slot]
+                route[row] = self.page_table[slot, :width]
         else:
             # rows are blended into their target slot's ring row in-jit
             route = np.zeros(nb, np.int32)
@@ -475,6 +492,26 @@ class ServingEngine:
             self.slot_pages[i] = block + 1
             self.stats["page_grants"] += 1
 
+    def _pow2_width(self, pages: int) -> int:
+        """Page-table width bucket covering ``pages``: next power of two,
+        capped at pages_per_slot — bounds jit retraces to O(log) shapes.
+        Shared by prefill routing and the decode table so both warm the
+        same shapes."""
+        width = 1
+        while width < max(1, pages):
+            width *= 2
+        return min(width, self.pages_per_slot)
+
+    def _active_table(self) -> np.ndarray:
+        """Page table truncated to the page columns actually in use this
+        tick (pow2-bucketed). Decode attention then scales with the
+        pages slots HOLD, not with ``max_len`` — the ring and the
+        full-width gather always pay for max_len keys. Dropped columns
+        are unallocated (-1) or beyond every write cursor, so the
+        attention result is unchanged."""
+        width = self._pow2_width(int(self.slot_pages.max()))
+        return self.page_table[:, :width]
+
     # -- decode ------------------------------------------------------------
     def step(self):
         """One engine tick: admit, grant pages, ONE fused decode, retire."""
@@ -492,7 +529,7 @@ class ServingEngine:
                 jnp.asarray(self.slot_pos), jnp.asarray(self.active),
             ]
             if self.kv_mode == "paged":
-                args.append(jnp.asarray(self.page_table))
+                args.append(jnp.asarray(self._active_table()))
             next_ids, self.cache = self._ragged_step(
                 *args, self._next_key(), jnp.float32(self.temperature)
             )

@@ -10,10 +10,9 @@ import textwrap
 
 import jax
 import numpy as np
-import pytest
 from jax.sharding import PartitionSpec as P
 
-from repro.configs import SHAPES, get_arch, smoke_config
+from repro.configs import SHAPES, get_arch
 from repro.distributed import sharding as sh
 from repro.models import build_template
 from repro.models.spec import TensorSpec
@@ -80,7 +79,7 @@ def test_long_context_batch1_seq_on_data_and_model():
     mesh = FakeMesh(data=16, model=16)
     cfg = get_arch("zamba2-7b")
     ps = sh.cache_pspecs(cfg, SHAPES["long_500k"], mesh)
-    attn_layers = [l for l in ps["layers"] if "attn_kv" in l]
+    attn_layers = [lyr for lyr in ps["layers"] if "attn_kv" in lyr]
     assert attn_layers, "zamba2 must have shared-attn caches"
     # batch=1 -> sequence carries the parallelism ('data'; kv heads divide
     # so 'model' stays on the kv axis)

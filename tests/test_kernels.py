@@ -74,6 +74,119 @@ def test_samd_matmul_batched_lead_dims():
     assert got.shape == (2, 3, n)
 
 
+# ---------------------------------------------------------------------------
+# fused paged-attention kernel vs the gather reference
+# ---------------------------------------------------------------------------
+
+def _paged_pools(rng, P, ps, hkv, dh, packed):
+    """Random pools in either operand layout: bf16 pages, or SAMD-packed
+    uint32 pages (+ per-(token, head) scales)."""
+    if not packed:
+        kp = jnp.asarray(rng.normal(size=(P, ps, hkv, dh)), jnp.bfloat16)
+        vp = jnp.asarray(rng.normal(size=(P, ps, hkv, dh)), jnp.bfloat16)
+        return kp, vp, None, None
+    from repro.quant.packing import pack_int8_lanes
+
+    k8 = rng.integers(-127, 128, size=(P, ps, hkv, dh)).astype(np.int8)
+    v8 = rng.integers(-127, 128, size=(P, ps, hkv, dh)).astype(np.int8)
+    ks = jnp.asarray(np.abs(rng.normal(size=(P, ps, hkv))) * 0.01 + 1e-4,
+                     jnp.float32)
+    vs = jnp.asarray(np.abs(rng.normal(size=(P, ps, hkv))) * 0.01 + 1e-4,
+                     jnp.float32)
+    return (pack_int8_lanes(jnp.asarray(k8)), pack_int8_lanes(jnp.asarray(v8)),
+            ks, vs)
+
+
+@pytest.mark.parametrize("lowering", ["pallas", "xla"])
+@pytest.mark.parametrize("packed", [False, True],
+                         ids=["bf16", "int8_packed"])
+@pytest.mark.parametrize("b", [1, 4])  # B=1 and B=max_batch
+def test_paged_attention_fused_vs_gather_ref(packed, b, lowering):
+    """The fused kernel must match the gather-then-attend oracle on a
+    ragged batch: shuffled page tables, per-row positions, partially
+    filled last pages, and fully unallocated tail blocks.
+
+    ``lowering`` covers both backends of ops.paged_decode_attention: the
+    Pallas kernel body under the interpreter (interpret=True) and the
+    unrolled-jnp lowering CPU serving uses (the default here)."""
+    P, ps, hkv, dh, n_pp, g = 16, 8, 2, 16, 4, 2
+    rng = np.random.default_rng(b + 10 * packed)
+    kp, vp, ks, vs = _paged_pools(rng, P, ps, hkv, dh, packed)
+    q = jnp.asarray(rng.normal(size=(b, hkv * g, dh)), jnp.bfloat16)
+    # every row gets a distinct allocation pattern: row i holds i+1 blocks
+    # of pages drawn without replacement, sits mid-way through its LAST
+    # page (partial fill), and leaves the remaining blocks unallocated
+    perm = rng.permutation(P)
+    pt = np.full((b, n_pp), -1, np.int32)
+    pos = np.zeros(b, np.int32)
+    take = 0
+    for i in range(b):
+        nblk = min(i + 1, n_pp)
+        pt[i, :nblk] = perm[take:take + nblk]
+        take += nblk
+        pos[i] = (nblk - 1) * ps + int(rng.integers(0, ps))  # partial last
+    got = ops.paged_decode_attention(
+        q, kp, vp, jnp.asarray(pt), jnp.asarray(pos),
+        k_scale=ks, v_scale=vs,
+        interpret=True if lowering == "pallas" else None,
+    )
+    want = ref.paged_attention_ref(
+        q, kp, vp, jnp.asarray(pt), jnp.asarray(pos),
+        k_scale=ks, v_scale=vs,
+    )
+    np.testing.assert_allclose(
+        np.asarray(got, np.float32), np.asarray(want, np.float32),
+        rtol=2e-2, atol=2e-2,
+    )
+
+
+def test_paged_attention_first_token_single_key():
+    """q_pos = 0: exactly one valid key — softmax must collapse to it."""
+    P, ps, hkv, dh = 4, 8, 2, 16
+    rng = np.random.default_rng(0)
+    kp, vp, _, _ = _paged_pools(rng, P, ps, hkv, dh, packed=False)
+    q = jnp.asarray(rng.normal(size=(1, hkv, dh)), jnp.bfloat16)
+    pt = jnp.asarray([[2, -1]], jnp.int32)
+    got = ops.paged_decode_attention(q, kp, vp, pt,
+                                     jnp.asarray([0], jnp.int32))
+    want = np.asarray(vp, np.float32)[2, 0]  # [hkv, dh], page 2 offset 0
+    np.testing.assert_allclose(np.asarray(got[0], np.float32), want,
+                               rtol=2e-2, atol=2e-2)
+
+
+def test_paged_attention_unallocated_row_yields_zeros():
+    """A page-table row of all -1 (inactive slot) must produce zeros, not
+    an average of arbitrary pool contents."""
+    P, ps, hkv, dh = 4, 8, 2, 16
+    rng = np.random.default_rng(1)
+    kp, vp, _, _ = _paged_pools(rng, P, ps, hkv, dh, packed=False)
+    q = jnp.asarray(rng.normal(size=(2, hkv, dh)), jnp.bfloat16)
+    pt = jnp.asarray([[1, 3], [-1, -1]], jnp.int32)
+    got = np.asarray(ops.paged_decode_attention(
+        q, kp, vp, pt, jnp.asarray([9, 9], jnp.int32)), np.float32)
+    assert np.all(got[1] == 0.0)
+    assert np.any(got[0] != 0.0)
+
+
+@pytest.mark.parametrize("block_kv_heads", [1, 2])
+def test_paged_attention_kv_head_blocking(block_kv_heads):
+    """Grid over kv-head blocks: any block size must give the same answer
+    as the oracle (one program per (slot, head-block))."""
+    P, ps, hkv, dh, n_pp = 8, 4, 4, 8, 3
+    rng = np.random.default_rng(block_kv_heads)
+    kp = jnp.asarray(rng.normal(size=(P, ps, hkv, dh)), jnp.float32)
+    vp = jnp.asarray(rng.normal(size=(P, ps, hkv, dh)), jnp.float32)
+    q = jnp.asarray(rng.normal(size=(2, hkv, dh)), jnp.float32)
+    pt = jnp.asarray([[0, 5, 2], [7, -1, -1]], jnp.int32)
+    pos = jnp.asarray([10, 3], jnp.int32)
+    got = ops.paged_decode_attention(q, kp, vp, pt, pos,
+                                     block_kv_heads=block_kv_heads,
+                                     interpret=True)
+    want = ref.paged_attention_ref(q, kp, vp, pt, pos)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-5, atol=1e-5)
+
+
 @pytest.mark.parametrize("bits", [2, 3, 4])
 @pytest.mark.parametrize("signed", [False, True])
 @pytest.mark.parametrize("n", [50, 333, 1024])

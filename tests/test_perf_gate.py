@@ -1,7 +1,7 @@
 """CI perf-regression gate over BENCH_*.json artifacts."""
 import json
 
-from benchmarks.perf_gate import compare, load_rows, main
+from benchmarks.perf_gate import compare, load_rows, main, markdown_report
 
 
 def test_compare_flags_only_real_regressions():
@@ -37,3 +37,34 @@ def test_gate_end_to_end(tmp_path):
     # missing baseline (first run) must pass
     assert main(["--baseline", str(tmp_path / "absent.json"),
                  "--current", str(cur)]) == 0
+
+
+def test_markdown_report_covers_every_row_class():
+    base = {"serving/a": 100.0, "serving/gone": 10.0,
+            "serving/per_row_x": 5.0}
+    cur = {"serving/a": 70.0, "serving/new": 99.0,
+           "serving/per_row_x": 1.0}
+    text = "\n".join(markdown_report(base, cur, 0.20, ("per_row",)))
+    assert "| serving/a | 100.00 | 70.00 | 70.00% | **REGRESSION** |" in text
+    assert "new — ignored" in text
+    assert "removed — ignored" in text
+    assert "| serving/per_row_x" in text and "excluded" in text
+
+
+def test_gate_appends_step_summary_table(tmp_path):
+    def write(path, rows):
+        path.write_text(json.dumps({"table": "serving", "rows": rows}))
+
+    base, cur = tmp_path / "base.json", tmp_path / "cur.json"
+    write(base, [{"name": "serving/x", "tokens_per_s": 100.0}])
+    write(cur, [{"name": "serving/x", "tokens_per_s": 99.0}])
+    summary = tmp_path / "summary.md"
+    assert main(["--baseline", str(base), "--current", str(cur),
+                 "--summary", str(summary)]) == 0
+    text = summary.read_text()
+    assert "| row | baseline | head | ratio | verdict |" in text
+    assert "serving/x" in text and "OK" in text
+    # the no-baseline notice also lands in the summary (appended)
+    assert main(["--baseline", str(tmp_path / "absent.json"),
+                 "--current", str(cur), "--summary", str(summary)]) == 0
+    assert "without a comparison" in summary.read_text()
