@@ -24,6 +24,14 @@ after every refill — and compares:
   * serving/per_row_bf16     — the seed engine's per-row Python fallback
                                (decode_mode='per_row'; the baseline PR 1
                                killed)
+  * serving/paged_prefix_share_bf16 / serving/paged_prefix_noshare_bf16
+                             — fused paged serving of a 16-request
+                               workload sharing a 75% common prompt
+                               prefix, with prefix sharing (copy-on-write
+                               pages) on vs off; the shared row must stay
+                               token-identical to the ring at <= 0.6x the
+                               no-sharing peak unique-page footprint
+                               (asserted)
 
 Row-naming rule: when a row's MEANING changes (its backend is swapped),
 it must be RENAMED, never reused — the perf gate only ever compares like
@@ -186,6 +194,102 @@ def paged_memory_check(cfg, max_batch: int = 4, max_len: int = 96,
     }
 
 
+def shared_prefix_check(cfg, max_batch: int = 4, max_len: int = 96,
+                        seed: int = 2, repeats: int = 1):
+    """Prefix-sharing acceptance + throughput rows.
+
+    Workload: 16 requests sharing a page-aligned 48-token common prefix
+    of 64-token prompts (75% shared, 3 of 4 prompt pages). Sharing must
+    (a) stay token-identical to the ring, and (b) serve from <= 0.6x the
+    unique-page footprint (peak pages with refcount > 0) of no-sharing
+    paged serving — asserted, not just printed. Returns the
+    serving/paged_prefix_{share,noshare}_bf16 BENCH rows (NEW names: the
+    gate never cross-compares them with the random-workload rows)."""
+    from repro.serving import Request, ServingEngine
+
+    page_size = 16
+    # 75% shared prefix, page-aligned: 3 of 4 prompt pages are common
+    prefix_len, prompt_len, max_tok = 48, 64, 8
+    rng = np.random.default_rng(seed)
+    prefix = rng.integers(0, cfg.vocab, size=prefix_len)
+
+    def requests():
+        return [
+            Request(rid=i,
+                    prompt=np.concatenate([
+                        prefix,
+                        rng.integers(0, cfg.vocab,
+                                     size=prompt_len - prefix_len)]),
+                    max_tokens=max_tok)
+            for i in range(16)
+        ]
+
+    workload = requests()
+
+    def serve(eng):
+        def reqs():
+            return [Request(r.rid, r.prompt.copy(), r.max_tokens)
+                    for r in workload]
+        # warm pass over the real workload: the shared-suffix prefill
+        # buckets and page-table widths sharing reaches are shapes the
+        # generic _warm (distinct prompts) can never produce. reset()
+        # keeps the compiled steps but zeroes the stats the timed pass
+        # measures (peak_pages_used).
+        _serve_mixed_arrivals(eng, reqs())
+        runs = []
+        for _ in range(max(1, repeats)):  # best-of-N like the main rows
+            eng.reset()
+            t0 = time.perf_counter()
+            tokens = _serve_mixed_arrivals(eng, reqs())
+            dt = time.perf_counter() - t0
+            assert len(eng.finished) == len(workload)
+            assert not any(r.truncated or r.error for r in eng.finished)
+            runs.append((tokens, dt))
+        tokens, dt = max(runs, key=lambda r: r[0] / r[1])
+        return tokens, dt, {r.rid: r.generated for r in eng.finished}
+
+    share = ServingEngine(cfg, max_batch=max_batch, max_len=max_len,
+                          kv_mode="paged", page_size=page_size)
+    noshare = ServingEngine(cfg, max_batch=max_batch, max_len=max_len,
+                            kv_mode="paged", page_size=page_size,
+                            prefix_sharing=False)
+    ring = ServingEngine(cfg, max_batch=max_batch, max_len=max_len,
+                         kv_mode="ring")
+    tok_s, dt_s, out_s = serve(share)
+    tok_n, dt_n, out_n = serve(noshare)
+    _, _, out_r = serve(ring)
+    assert out_s == out_n == out_r, \
+        "prefix sharing must stay token-identical to the ring"
+    assert share.stats["prefix_hits"] > 0
+
+    peak_s = share.stats["peak_pages_used"]
+    peak_n = noshare.stats["peak_pages_used"]
+    ratio = peak_s / peak_n
+    assert ratio <= 0.6, (
+        f"shared-prefix serving held {peak_s} unique pages at peak vs "
+        f"{peak_n} without sharing (ratio {ratio:.2f} > 0.60 floor)"
+    )
+
+    def row(name, tokens, dt, eng, extra):
+        return {
+            "name": name, "tokens": tokens, "seconds": dt,
+            "tokens_per_s": tokens / dt,
+            "peak_pages_used": eng.stats["peak_pages_used"],
+            **extra, **{k: v for k, v in eng.stats.items()
+                        if k != "peak_pages_used"},
+        }
+
+    shared_extra = {
+        "unique_page_ratio_vs_noshare": ratio,
+        "prefix_fraction": prefix_len / prompt_len,
+    }
+    return [
+        row("serving/paged_prefix_share_bf16", tok_s, dt_s, share,
+            shared_extra),
+        row("serving/paged_prefix_noshare_bf16", tok_n, dt_n, noshare, {}),
+    ]
+
+
 # fused-vs-ring parity floor asserted by run(): the paged default must not
 # give back the decode-gap win the fused kernel exists to close
 PARITY_FRACTION = 0.95
@@ -300,6 +404,13 @@ def run(quick: bool = True, max_batch: int = 4, max_len: int = 96,
     mem_row = paged_memory_check(cfg, max_batch=max_batch, max_len=max_len)
     csv_rows.append((mem_row["name"], mem_row["tokens_per_s"], 0.0))
     json_rows.append(mem_row)
+
+    # shared-prefix acceptance: token-identity to the ring + <= 0.6x the
+    # unique-page footprint of no-sharing paged serving (asserted inside)
+    for prow in shared_prefix_check(cfg, max_batch=max_batch,
+                                    max_len=max_len, repeats=repeats):
+        csv_rows.append((prow["name"], prow["tokens_per_s"], 0.0))
+        json_rows.append(prow)
     return csv_rows, json_rows
 
 
@@ -327,6 +438,13 @@ def main() -> None:
           f"(ratio {mem['kv_bytes_ratio']:.2f}) serving "
           f"{mem['sum_prompt_tokens']} summed prompt tokens "
           f"(> {mem['sum_prompt_threshold']:.0f} threshold) — OK")
+    share = next(r for r in json_rows
+                 if r["name"] == "serving/paged_prefix_share_bf16")
+    print(f"# prefix sharing ({share['prefix_fraction']:.0%} shared "
+          f"prompt): peak {share['peak_pages_used']} unique pages, "
+          f"{share['unique_page_ratio_vs_noshare']:.2f}x no-sharing "
+          f"(floor 0.60), {share['prefix_hits']} page hits, "
+          f"{share['prefix_tokens_saved']} prefill tokens skipped — OK")
     path = write_bench_json("serving", json_rows, out_dir=args.out_dir)
     print(f"# wrote {path}")
 

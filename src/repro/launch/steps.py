@@ -213,15 +213,30 @@ def make_paged_prefill_step(cfg: ArchConfig, run: RunConfig,
     step: each admitted row's KV lands directly in the pages its table
     names, and padding rows (valid=False, page table all -1) write nothing.
     Attention-family only, like ``make_batched_prefill_step``.
+
+    Prefix sharing rides on the per-row ``starts`` offsets: a row whose
+    leading prompt blocks were mapped from already-resident shared pages
+    carries only its UNSHARED suffix in ``tokens`` and its first unshared
+    position in ``starts``. Queries then attend to the shared prefix KV
+    through the page table (those blocks are in the row's table and
+    ``_paged_key_positions`` marks them valid), while the ragged KV
+    scatter starts at ``starts[row]`` — the shared pages are never
+    rewritten. ``starts = 0`` everywhere reproduces the unshared PR 2
+    behavior exactly.
     """
 
-    def paged_prefill_step(params, tokens, lens, page_table, valid, cache,
-                           key, temperature):
-        """tokens [Nb, Lb] right-padded; lens [Nb]; page_table [Nb, n_pp]
-        pool pages of each row's TARGET SLOT; valid [Nb] bool."""
+    def paged_prefill_step(params, tokens, lens, starts, page_table, valid,
+                           cache, key, temperature):
+        """tokens [Nb, Lb] right-padded UNSHARED suffixes; lens [Nb] suffix
+        lengths; starts [Nb] first unshared logical position per row;
+        page_table [Nb, n_pp] pool pages of each row's TARGET SLOT
+        (including its shared prefix pages); valid [Nb] bool."""
         nb, lb = tokens.shape
         t_idx = jnp.arange(lb, dtype=jnp.int32)[None, :]
-        pos = jnp.where(t_idx < lens[:, None], t_idx, -1)
+        pos = jnp.where(
+            t_idx < lens[:, None], starts[:, None].astype(jnp.int32) + t_idx,
+            -1,
+        )
         logits, new_cache, _ = forward(
             params, tokens, cfg, positions=pos, cache=cache,
             page_table=page_table, page_size=page_size,

@@ -1,6 +1,6 @@
 """Model zoo: composable decoder covering all assigned architectures."""
 from repro.models.model import (
-    build_template, forward, init_cache, init_paged_cache,
+    build_template, copy_paged_page, forward, init_cache, init_paged_cache,
 )
 from repro.models.spec import (
     TensorSpec,
@@ -12,7 +12,8 @@ from repro.models.quantize import quantize_params, quantized_spec_tree
 from repro.models.layers import QuantizedTensor, materialize
 
 __all__ = [
-    "build_template", "forward", "init_cache", "init_paged_cache",
+    "build_template", "copy_paged_page", "forward", "init_cache",
+    "init_paged_cache",
     "TensorSpec",
     "init_from_spec", "param_count", "shape_dtype_from_spec",
     "quantize_params", "quantized_spec_tree", "QuantizedTensor",

@@ -214,9 +214,14 @@ def _cache_write(buf: jax.Array, val: jax.Array, cache_index, s: int):
 # Validity is derived, not stored: a gathered key at logical position t is
 # valid iff its block is allocated, and causality (k_pos <= q_pos) masks
 # allocated-but-not-yet-written offsets — every position <= the row's
-# current position has been written by the CURRENT occupant, because pages
-# are granted before the write that needs them and freed pages re-enter the
-# pool only after retirement. No per-token ``pos`` buffer is needed.
+# current position has been written either by the CURRENT occupant or, for
+# refcount-shared prefix pages, by a DONOR request whose token prefix is
+# identical up to that position (same tokens + same positions => same KV,
+# so shared reads are indistinguishable from own writes). This holds
+# because pages are granted before the write that needs them, a shared
+# page is copy-on-write forked before any occupant-specific write lands in
+# it, and freed pages re-enter the pool only when their refcount drops to
+# zero. No per-token ``pos`` buffer is needed.
 
 def _paged_flat_index(page_table: jax.Array, positions: jax.Array,
                       page_size: int, oob: int) -> jax.Array:

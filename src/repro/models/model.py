@@ -347,6 +347,29 @@ def init_paged_cache(cfg: ArchConfig, num_pages: int, page_size: int,
     return {"layers": [kv_pool() for _ in range(cfg.n_layers)]}
 
 
+def copy_paged_page(cache: dict, src, dst) -> dict:
+    """Device-side copy of pool page ``src`` into page ``dst`` across every
+    layer's KV pools (k/v and, for packed int8 pools, the scale pages).
+
+    This is the copy-on-write fork primitive for prefix sharing: when a
+    request maps a donor's partially-relevant page and must write into it
+    (the prefill/decode cursor lands inside the block), the engine forks
+    the page with one fused device op instead of re-prefilling the
+    block's tokens through every layer. ``src``/``dst`` may be traced
+    scalars, so a single jit of this function serves every fork.
+
+    Unrolled ``{'layers': [...]}`` pools only: a stacked pool's leading
+    axis is LAYERS, so indexing it by page id would overwrite a whole
+    layer's pool instead of forking one page.
+    """
+    if "layers_stacked" in cache:
+        raise ValueError(
+            "copy_paged_page needs the unrolled {'layers': [...]} cache "
+            "layout; a stacked pool's leading axis is layers, not pages"
+        )
+    return jax.tree.map(lambda pool: pool.at[dst].set(pool[src]), cache)
+
+
 # ---------------------------------------------------------------------------
 # forward
 # ---------------------------------------------------------------------------

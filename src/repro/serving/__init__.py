@@ -1,3 +1,3 @@
-from repro.serving.engine import ServingEngine, Request
+from repro.serving.engine import PageAllocator, Request, ServingEngine
 
-__all__ = ["ServingEngine", "Request"]
+__all__ = ["PageAllocator", "Request", "ServingEngine"]

@@ -44,35 +44,57 @@ families under ragged decode):
     ``quant.kv_bits=8``);
     resident KV memory is ``num_pages * page_size`` tokens per layer, NOT
     ``max_batch * max_len`` — long and short requests share the pool;
+  * pages are REFCOUNTED and PREFIX-SHARED (``prefix_sharing=True``, the
+    default): the engine keeps a prefix index mapping the token content
+    of each resident FULL page (keyed by the whole token prefix through
+    that page, so two requests share a page only when everything before
+    it matches too) to its pool page id. Admission matches a new prompt's
+    leading full blocks against the index and maps hits straight into the
+    slot's page table (refcount bumped) instead of re-prefilling them;
+    prefill then runs only over the UNSHARED suffix, starting at the
+    first unshared position. A page whose leading tokens match the
+    prompt's partial tail block is copy-on-write FORKED (one device-side
+    page copy, see ``models.copy_paged_page``) before the fork-holder's
+    first write lands in it — shared pages are immutable while their
+    refcount exceeds one. Pages whose last holder releases them
+    (refcount -> 0) return to the free list and leave the index, so a
+    recycled page can never leak stale KV into the index;
   * allocation lifecycle: admission takes ``ceil(len(prompt)/page_size)``
-    pages from the host-side free list and — under the default
-    ``admission="reserve"`` policy — additionally RESERVES the request's
-    worst-case decode growth, ``ceil(min(len + max_tokens - 1, max_len) /
-    page_size)`` pages in total (the final sampled token is never written
-    back), so mid-decode grants can never fail. A
-    request whose pages are not available yet waits at the queue head;
-    one that could never fit the pool is rejected with ``error``. Each
-    decode tick grants one more page (claimed from the reservation) to
-    any slot whose next write crosses a page boundary; ALL of a slot's
-    pages and unused reservations return to the free list the moment its
-    request retires (natural, truncated, or rejected-at-admission);
+    pages (minus shared hits) from the host-side free list and — under
+    the default ``admission="reserve"`` policy — additionally RESERVES
+    the request's worst-case decode growth, ``ceil(min(len + max_tokens -
+    1, max_len) / page_size)`` pages in total (the final sampled token is
+    never written back), so mid-decode grants can never fail. A request
+    whose pages are not available yet waits at the queue head; one that
+    could never fit the pool is rejected with ``error``. Each decode tick
+    grants one more page (claimed from the reservation) to any slot whose
+    next write crosses a page boundary; ALL of a slot's page refs and
+    unused reservations are dropped the moment its request retires
+    (natural, truncated, preempted, or rejected-at-admission);
   * ``admission="optimistic"`` skips the growth reservation — higher
     admission concurrency, but the pool can run dry mid-decode.
-    Out-of-pages (OOP) behavior: if a page grant fails because the pool
-    is exhausted, THAT slot is force-retired with ``truncated=True`` (its
-    pages fund the remaining slots) and serving continues — the engine
-    never deadlocks and never crashes on pool pressure;
+    Out-of-pages behavior is page-level PREEMPTION, not truncation: when
+    a grant finds the pool dry, the YOUNGEST resident request (latest
+    admission) is preempted — its page refs are released and it is
+    re-queued for recompute-resume, with every token it already generated
+    becoming part of its re-prefill prompt — so feasible requests always
+    complete token-identically, just later. Only a request that holds the
+    ENTIRE pool and still needs more (i.e. one that can never fit, alone)
+    is force-retired with ``truncated=True`` as a last resort — the
+    engine never deadlocks and never crashes on pool pressure;
   * freed pages are NOT scrubbed: validity of a gathered key derives from
-    the page table plus causal masking, so a new occupant can never attend
-    to a previous occupant's KV (see layers._paged_key_positions).
+    the page table plus causal masking (plus prefix-donor identity for
+    shared pages), so a new occupant can never attend to a previous
+    occupant's KV (see layers._paged_key_positions).
 
 ``kv_mode="ring"`` keeps the PR 1 fixed per-slot KV ring (also the
 automatic fallback for recurrent families and ``decode_mode="per_row"``);
 ``decode_mode="per_row"`` keeps the old per-row reference path (slow, one
 ``forward`` per slot per tick) for equivalence tests and as the benchmark
 baseline. ``ServingEngine.stats`` counts compiled-step, per-row-forward,
-page-grant and OOP-retire events so tests can assert the hot path stays
-fused and pool pressure is visible.
+page-grant, prefix-hit, COW-fork, preemption and OOP-retire events plus
+the peak page-pool occupancy, so tests can assert the hot path stays
+fused and pool pressure (and the sharing win) is visible.
 """
 from __future__ import annotations
 
@@ -87,8 +109,8 @@ import numpy as np
 from repro.configs.base import ArchConfig, RunConfig, ShapeConfig
 from repro.launch import steps as steps_mod
 from repro.models import (
-    build_template, forward, init_cache, init_paged_cache, init_from_spec,
-    quantize_params,
+    build_template, copy_paged_page, forward, init_cache, init_paged_cache,
+    init_from_spec, quantize_params,
 )
 from repro.quant.config import QuantConfig
 
@@ -103,6 +125,11 @@ class Request:
     # outcome flags (set by the engine):
     truncated: bool = False     # force-retired (cache/page-pool exhaustion)
     error: Optional[str] = None  # rejected before prefill; no tokens
+    # engine-internal: set while a preempted request waits for
+    # recompute-resume (prompt + already-generated tokens, re-prefilled
+    # verbatim), and the admission sequence used as preemption priority
+    resume_prompt: Optional[np.ndarray] = None
+    _seq: int = -1
 
     @property
     def done(self) -> bool:
@@ -113,17 +140,29 @@ class Request:
 
 
 class PageAllocator:
-    """Host-side free list over the global KV page pool (O(1) alloc/free).
+    """Host-side refcounted free list over the global KV page pool.
 
-    Besides outright allocation it tracks RESERVATIONS: pages promised to
-    admitted requests for their future decode growth but not yet bound to
-    a page table. Reserved pages stay in the free list (they hold no data)
-    yet are invisible to further admissions, so a reservation-admitted
-    request can always claim its next page mid-decode."""
+    O(1) alloc/free. Three kinds of bookkeeping:
+
+    * ALLOCATION: ``alloc`` grants pages at refcount 1; ``release`` drops
+      one ref per page and returns a page to the free list only when its
+      refcount reaches zero (it also RETURNS the list of actually-freed
+      pages so the owner can invalidate any content index entries).
+    * SHARING: ``share`` bumps the refcount of an already-held page —
+      prefix sharing maps one physical page into many page tables. A page
+      is never simultaneously free and referenced, and a page granted by
+      ``alloc``/``claim_reserved`` is never one that is still held.
+    * RESERVATIONS: pages promised to admitted requests for their future
+      decode growth but not yet bound to a page table. Reserved pages stay
+      in the free list (they hold no data) yet are invisible to further
+      admissions, so a reservation-admitted request can always claim its
+      next page mid-decode.
+    """
 
     def __init__(self, num_pages: int):
         self.num_pages = num_pages
         self._free = list(range(num_pages - 1, -1, -1))
+        self.refcount = np.zeros(num_pages, np.int32)
         self.reserved = 0
 
     @property
@@ -131,9 +170,21 @@ class PageAllocator:
         return len(self._free)
 
     @property
+    def held_pages(self) -> int:
+        """Pages with at least one holder (unique-page footprint)."""
+        return int((self.refcount > 0).sum())
+
+    @property
     def available(self) -> int:
         """Pages an admission may take or reserve right now."""
         return len(self._free) - self.reserved
+
+    def _grant(self, n: int) -> list:
+        pages = [self._free.pop() for _ in range(n)]
+        for p in pages:
+            assert self.refcount[p] == 0, ("double grant", p)
+            self.refcount[p] = 1
+        return pages
 
     def alloc(self, n: int, reserve: int = 0) -> Optional[list]:
         """Take ``n`` pages and reserve ``reserve`` more, or None (and
@@ -141,24 +192,40 @@ class PageAllocator:
         if n + reserve > self.available:
             return None
         self.reserved += reserve
-        return [self._free.pop() for _ in range(n)]
+        return self._grant(n)
 
     def claim_reserved(self, n: int = 1) -> list:
         """Convert previously reserved pages into real ones (never fails:
         the reservation guarantees them)."""
         assert 0 <= n <= self.reserved <= len(self._free)
         self.reserved -= n
-        return [self._free.pop() for _ in range(n)]
+        return self._grant(n)
 
     def cancel_reservation(self, n: int) -> None:
         self.reserved -= n
         assert self.reserved >= 0
 
-    def release(self, pages) -> None:
-        self._free.extend(int(p) for p in pages)
+    def share(self, page: int) -> None:
+        """Add a reference to an already-held page (prefix sharing)."""
+        assert self.refcount[page] >= 1, ("share of unheld page", page)
+        self.refcount[page] += 1
+
+    def release(self, pages) -> list:
+        """Drop one reference per page; pages whose refcount reaches zero
+        return to the free list. Returns the actually-freed pages."""
+        freed = []
+        for p in pages:
+            p = int(p)
+            assert self.refcount[p] >= 1, ("release of unheld page", p)
+            self.refcount[p] -= 1
+            if self.refcount[p] == 0:
+                self._free.append(p)
+                freed.append(p)
+        return freed
 
     def reset(self) -> None:
         self._free = list(range(self.num_pages - 1, -1, -1))
+        self.refcount[:] = 0
         self.reserved = 0
 
 
@@ -182,7 +249,8 @@ class ServingEngine:
                  page_size: int = 16,
                  num_pages: Optional[int] = None,
                  admission: str = "reserve",
-                 paged_attn: str = "fused"):
+                 paged_attn: str = "fused",
+                 prefix_sharing: bool = True):
         assert decode_mode in ("ragged", "per_row"), decode_mode
         assert admission in ("reserve", "optimistic"), admission
         assert paged_attn in ("fused", "gather"), paged_attn
@@ -209,12 +277,13 @@ class ServingEngine:
         self.kv_mode = kv_mode
         self.admission = admission
         self.paged_attn = paged_attn
+        self.prefix_sharing = bool(prefix_sharing) and kv_mode == "paged"
         self.page_size = page_size
         self.pages_per_slot = -(-max_len // page_size)
         if num_pages is None:
             # full coverage by default: paged is then a drop-in for the
             # ring (token-identical, no truncation risk); size it smaller
-            # to trade memory for OOP truncation under pressure.
+            # to trade memory for preemption under pressure.
             num_pages = max_batch * self.pages_per_slot
         self.num_pages = num_pages
         template = build_template(cfg)
@@ -235,6 +304,10 @@ class ServingEngine:
                     cfg, run, page_size, paged_attn=paged_attn),
                 donate_argnums=(2,),
             )
+            # COW fork primitive: one fused device op copies a pool page
+            # across every layer (src/dst are traced, so one compile
+            # serves every fork)
+            self._copy_page = jax.jit(copy_paged_page, donate_argnums=(0,))
         else:
             self._ragged_step = jax.jit(
                 steps_mod.make_ragged_serve_step(cfg, run),
@@ -247,7 +320,7 @@ class ServingEngine:
         if kv_mode == "paged":
             self._prefill_step = jax.jit(
                 steps_mod.make_paged_prefill_step(cfg, run, page_size),
-                donate_argnums=(5,),
+                donate_argnums=(6,),
             )
         elif self._batched_prefill:
             self._prefill_step = jax.jit(
@@ -268,14 +341,30 @@ class ServingEngine:
                                   np.int32)
         self.slot_pages = np.zeros(max_batch, np.int32)     # allocated count
         self.slot_reserved = np.zeros(max_batch, np.int32)  # growth pages
+        self._slot_seq = np.zeros(max_batch, np.int64)      # admission order
+        self._seq_counter = 0
+        # prefix index: chain key (token prefix bytes through a FULL
+        # block) -> resident pool page, plus the reverse maps needed to
+        # deregister on free and to match partial tails for COW forks
+        self._prefix_index: dict[bytes, int] = {}
+        self._page_key: dict[int, bytes] = {}
+        self._page_parent: dict[int, bytes] = {}
+        self._page_block: dict[int, np.ndarray] = {}
+        self._prefix_children: dict[bytes, set] = {}
+        self._prefix_ready: set[int] = set()  # KV written on device
         self.stats = {
             "decode_steps": 0,          # fused ragged decode invocations
             "prefill_calls": 0,         # batched/fused prefill invocations
             "per_row_prefill_calls": 0,
             "per_row_forward_calls": 0,  # reference decode path only
             "page_grants": 0,           # incremental mid-decode page allocs
+            "prefix_hits": 0,           # pages mapped shared at admission
+            "prefix_tokens_saved": 0,   # prompt tokens prefill skipped
+            "cow_forks": 0,             # copy-on-write page copies
+            "preemptions": 0,           # slots preempted for recompute
             "oop_retired": 0,           # slots truncated on pool exhaustion
             "rejected": 0,              # requests refused before prefill
+            "peak_pages_used": 0,       # max pages with refcount > 0
         }
 
     def _init_cache(self):
@@ -298,6 +387,107 @@ class ServingEngine:
         self._key, k = jax.random.split(self._key)
         return k
 
+    # -- prefix index ------------------------------------------------------
+    def _written_tokens(self, i: int) -> np.ndarray:
+        """The token written at each logical position 0..slot_pos-1 of
+        slot ``i``: the original prompt plus every generated token except
+        the last (sampled, but written back only by the NEXT decode
+        tick). The invariant ``slot_pos == len(prompt) + len(generated)
+        - 1`` holds for every active slot — admission hands off with one
+        sampled-unwritten token and each tick writes one and samples one
+        — and survives preemption-resume unchanged, so the written-token
+        record is always derivable from the request itself instead of
+        being tracked as parallel per-slot state."""
+        req = self.slots[i]
+        toks = np.asarray(req.prompt, np.int32)
+        if req.generated:
+            toks = np.concatenate(
+                [toks, np.asarray(req.generated[:-1], np.int32)])
+        assert len(toks) == int(self.slot_pos[i]), (len(toks), i)
+        return toks
+
+    @staticmethod
+    def _eff_prompt(req: Request) -> np.ndarray:
+        """The tokens this admission must make resident: the original
+        prompt, or (recompute-resume) prompt + already-generated tokens."""
+        src = req.resume_prompt if req.resume_prompt is not None \
+            else req.prompt
+        return np.asarray(src, np.int32)
+
+    def _register_block(self, eff: np.ndarray, b: int, page: int) -> bool:
+        """Index full block ``b`` of ``eff`` (its page now holds that
+        content). Keys are the raw token-prefix bytes THROUGH the block —
+        exact, no hash-collision risk — so a hit guarantees the donor's
+        entire history matches. Returns False if equivalent content is
+        already indexed."""
+        ps = self.page_size
+        key = eff[: (b + 1) * ps].tobytes()
+        if key in self._prefix_index:
+            return False
+        parent = eff[: b * ps].tobytes()
+        self._prefix_index[key] = page
+        self._page_key[page] = key
+        self._page_parent[page] = parent
+        self._page_block[page] = eff[b * ps:(b + 1) * ps].copy()
+        self._prefix_children.setdefault(parent, set()).add(page)
+        return True
+
+    def _deregister(self, freed_pages) -> None:
+        """Drop index entries for pages whose refcount reached zero — a
+        recycled page must never satisfy a future prefix match."""
+        for p in freed_pages:
+            key = self._page_key.pop(p, None)
+            self._prefix_ready.discard(p)
+            if key is None:
+                continue
+            if self._prefix_index.get(key) == p:
+                del self._prefix_index[key]
+            parent = self._page_parent.pop(p)
+            kids = self._prefix_children.get(parent)
+            if kids is not None:
+                kids.discard(p)
+                if not kids:
+                    del self._prefix_children[parent]
+            self._page_block.pop(p, None)
+
+    def _match_prefix(self, eff: np.ndarray):
+        """Match ``eff``'s leading blocks against resident pages.
+
+        Returns (shared_pages, fork_src, prefill_start): ``shared_pages``
+        are full-block hits to map refcounted; ``fork_src`` (may be None)
+        is a resident page whose leading tokens equal the prompt's partial
+        tail block — COW-forked so prefill only recomputes the LAST prompt
+        token (its logits seed decoding). At least one token always
+        remains to prefill."""
+        t, ps = len(eff), self.page_size
+        shared: list = []
+        if not self.prefix_sharing or t == 0:
+            return shared, None, 0
+        m_max = (t - 1) // ps
+        while len(shared) < m_max:
+            page = self._prefix_index.get(
+                eff[: (len(shared) + 1) * ps].tobytes())
+            if page is None:
+                break
+            shared.append(page)
+        m = len(shared)
+        fork_src = None
+        if m == m_max:
+            # the full-block chain matched end to end; look for a resident
+            # block extending it whose first r tokens equal the remaining
+            # tail (r == ps when the prompt ends exactly on a page edge).
+            # Only fork-ready pages: the copy reads the device pool NOW.
+            r = t - m * ps
+            tail = eff[m * ps: t]
+            for page in self._prefix_children.get(
+                    eff[: m * ps].tobytes(), ()):
+                if page in self._prefix_ready and np.array_equal(
+                        self._page_block[page][:r], tail):
+                    fork_src = page
+                    break
+        start = (t - 1) if fork_src is not None else m * ps
+        return shared, fork_src, start
+
     # -- admission ---------------------------------------------------------
     def submit(self, req: Request):
         self.queue.append(req)
@@ -309,6 +499,73 @@ class ServingEngine:
         self.finished.append(req)
         self.stats["rejected"] += 1
 
+    def _paged_bind(self, slot: int, req: Request, eff: np.ndarray,
+                    pending_ready: list):
+        """Bind one request's pages to ``slot``: map shared prefix hits,
+        COW-fork a matching partial tail, allocate the rest (plus the
+        growth reservation). Returns ("ok", prefill_start) on success,
+        ("wait", 0) on pool pressure, ("reject", 0) if infeasible."""
+        ps = self.page_size
+        t = len(eff)
+        blocks = max(1, -(-t // ps))
+        shared, fork_src, start = self._match_prefix(eff)
+        m = len(shared)
+        # worst-case decode growth: a fresh request's first generated
+        # token comes from prefill without a cache write, so writes reach
+        # at most position len + max_tokens - 2; a resumed request writes
+        # its stored last token too, one more position
+        gen_left = req.max_tokens - len(req.generated)
+        future = gen_left - (0 if req.resume_prompt is not None else 1)
+        horizon_tok = min(t + future, self.max_len)
+        horizon = max(blocks, -(-horizon_tok // ps))
+        reserve = horizon - blocks if self.admission == "reserve" else 0
+        if blocks + reserve > self.num_pages:
+            self._reject(
+                req,
+                f"request needs {blocks + reserve} KV pages; "
+                f"pool holds {self.num_pages}",
+            )
+            return "reject", 0
+        pages = self._allocator.alloc(blocks - m, reserve=reserve)
+        if pages is None:
+            # pool pressure: wait at the queue head until a retirement
+            # frees pages
+            return "wait", 0
+        for b, pg in enumerate(shared):
+            self._allocator.share(pg)
+            self.page_table[slot, b] = pg
+        nxt = m
+        if fork_src is not None:
+            # COW fork: the prefill write at position t-1 (and decode
+            # right after it) lands inside this shared block, so the
+            # holder gets a private device-side copy up front — one page
+            # copy instead of re-prefilling the block through every layer
+            dst = pages[0]
+            self.cache = self._copy_page(
+                self.cache, jnp.int32(fork_src), jnp.int32(dst))
+            self.page_table[slot, m] = dst
+            self.stats["cow_forks"] += 1
+            pages = pages[1:]
+            nxt = m + 1
+        for j, pg in enumerate(pages):
+            self.page_table[slot, nxt + j] = pg
+        self.slot_pages[slot] = blocks
+        self.slot_reserved[slot] = reserve
+        if start:
+            self.stats["prefix_hits"] += m + (fork_src is not None)
+            self.stats["prefix_tokens_saved"] += start
+        if self.prefix_sharing:
+            # index this prompt's full blocks; every NEWLY registered one
+            # is a page this batch's prefill is about to write (already-
+            # resident blocks — shared hits and a full-hit fork's source
+            # key — register as False), so ready flips after the prefill
+            for b in range(t // ps):
+                page = int(self.page_table[slot, b])
+                if self._register_block(eff, b, page):
+                    pending_ready.append(page)
+        self._note_peak()
+        return "ok", start
+
     def _admit(self):
         while self.queue:
             free = [i for i, r in enumerate(self.slots) if r is None]
@@ -316,108 +573,126 @@ class ServingEngine:
                 return
             batch: list[Request] = []
             batch_slots: list[int] = []
+            batch_effs: list[np.ndarray] = []
+            batch_starts: list[int] = []
+            pending_ready: list[int] = []  # fork-eligible after prefill
+            stalled = False
             while self.queue and len(batch) < len(free):
                 req = self.queue.popleft()
-                if len(req.prompt) >= self.max_len:
+                eff = self._eff_prompt(req)
+                if len(eff) >= self.max_len:
                     # bugfix: this used to trip an assert inside prefill and
                     # kill the engine mid-tick, losing every in-flight
                     # request
                     self._reject(
                         req,
-                        f"prompt length {len(req.prompt)} >= max_len "
+                        f"prompt length {len(eff)} >= max_len "
                         f"{self.max_len}",
                     )
                     continue
                 slot = free[len(batch)]
+                start = 0
                 if self.kv_mode == "paged":
-                    need = max(1, -(-len(req.prompt) // self.page_size))
-                    # worst-case decode growth: the first generated token
-                    # comes from prefill without a cache write, so writes
-                    # reach at most position len + max_tokens - 2
-                    horizon_tok = min(len(req.prompt) + req.max_tokens - 1,
-                                      self.max_len)
-                    horizon = max(need, -(-horizon_tok // self.page_size))
-                    reserve = (horizon - need
-                               if self.admission == "reserve" else 0)
-                    if need + reserve > self.num_pages:
-                        self._reject(
-                            req,
-                            f"request needs {need + reserve} KV pages; "
-                            f"pool holds {self.num_pages}",
-                        )
-                        continue
-                    pages = self._allocator.alloc(need, reserve=reserve)
-                    if pages is None:
-                        # pool pressure: wait at the queue head until a
-                        # retirement frees pages
+                    status, start = self._paged_bind(slot, req, eff,
+                                                     pending_ready)
+                    if status == "wait":
                         self.queue.appendleft(req)
+                        stalled = True
                         break
-                    self.page_table[slot, :need] = pages
-                    self.slot_pages[slot] = need
-                    self.slot_reserved[slot] = reserve
+                    if status == "reject":
+                        continue
                 batch.append(req)
                 batch_slots.append(slot)
+                batch_effs.append(eff)
+                batch_starts.append(start)
             if not batch:
                 return
             if self._batched_prefill:
-                self._prefill_batch(batch_slots, batch)
+                self._prefill_batch(batch_slots, batch, batch_effs,
+                                    batch_starts)
+                # freshly-written full blocks may now serve as COW fork
+                # sources (their KV is on device) — unless the batch
+                # already freed them again (done-at-admit requests)
+                self._prefix_ready.update(
+                    p for p in pending_ready if p in self._page_key)
             else:
                 for slot, req in zip(batch_slots, batch):
                     self._prefill_one(slot, req)
+            if stalled:
+                return
 
-    def _prefill_batch(self, slots: list[int], reqs: list[Request]):
-        """Admit N requests with ONE forward: prompts right-padded to a
-        shared bucket. Ring mode blends the filled rows into the slots'
-        cache rows inside the jit; paged mode writes straight into the
-        slots' pages through their page tables."""
-        lens = [len(r.prompt) for r in reqs]
-        assert max(lens) < self.max_len, "admission rejects over-long prompts"
+    def _prefill_batch(self, slots: list[int], reqs: list[Request],
+                       effs: list[np.ndarray], starts: list[int]):
+        """Admit N requests with ONE forward: each row carries only its
+        UNSHARED prompt suffix, right-padded to a shared bucket, written
+        at positions ``start..len-1``. Ring mode blends the filled rows
+        into the slots' cache rows inside the jit; paged mode writes
+        straight into the slots' pages through their page tables (the
+        tables also expose the shared prefix pages, so suffix queries
+        attend across the whole prompt)."""
+        lens = [len(e) - s for e, s in zip(effs, starts)]
+        assert all(ln >= 1 for ln, s in zip(lens, starts) if s), \
+            "sharing must leave >= 1 token to prefill"
+        assert max(len(e) for e in effs) < self.max_len, \
+            "admission rejects over-long prompts"
         lb = _bucket_len(max(lens), self.max_len)
         nb = self.max_batch
         tokens = np.zeros((nb, lb), np.int32)
         lens_a = np.zeros(nb, np.int32)
+        starts_a = np.zeros(nb, np.int32)
         valid = np.zeros(nb, bool)
-        for row, req in enumerate(reqs):
-            tokens[row, :lens[row]] = np.asarray(req.prompt, np.int32)
+        for row, (eff, st) in enumerate(zip(effs, starts)):
+            tokens[row, :lens[row]] = eff[st:]
             lens_a[row] = lens[row]
+            starts_a[row] = st
             valid[row] = True
         if self.kv_mode == "paged":
             # rows write through their target slot's page table, truncated
             # to the admitted batch's used page columns (pow2-bucketed like
             # the decode table — prefill attention work then scales with
-            # the prompts' pages, not pages_per_slot)
-            width = self._pow2_width(-(-max(lens) // self.page_size))
+            # the prompts' pages, not pages_per_slot). Width covers the
+            # SHARED prefix blocks too: suffix queries attend to them.
+            max_blocks = max(
+                -(-len(e) // self.page_size) for e in effs)
+            width = self._pow2_width(max_blocks)
             route = np.full((nb, width), -1, np.int32)
             for row, slot in enumerate(slots):
                 route[row] = self.page_table[slot, :width]
+            tok0, self.cache = self._prefill_step(
+                self.params, jnp.asarray(tokens), jnp.asarray(lens_a),
+                jnp.asarray(starts_a), jnp.asarray(route),
+                jnp.asarray(valid), self.cache,
+                self._next_key(), jnp.float32(self.temperature),
+            )
         else:
             # rows are blended into their target slot's ring row in-jit
             route = np.zeros(nb, np.int32)
             for row, slot in enumerate(slots):
                 route[row] = slot
-        tok0, self.cache = self._prefill_step(
-            self.params, jnp.asarray(tokens), jnp.asarray(lens_a),
-            jnp.asarray(route), jnp.asarray(valid), self.cache,
-            self._next_key(), jnp.float32(self.temperature),
-        )
+            tok0, self.cache = self._prefill_step(
+                self.params, jnp.asarray(tokens), jnp.asarray(lens_a),
+                jnp.asarray(route), jnp.asarray(valid), self.cache,
+                self._next_key(), jnp.float32(self.temperature),
+            )
         self.stats["prefill_calls"] += 1
         tok0 = np.asarray(tok0)
         for row, (slot, req) in enumerate(zip(slots, reqs)):
-            self._finish_admit(slot, req, lens[row], int(tok0[row]))
+            self._finish_admit(slot, req, effs[row], int(tok0[row]))
 
     def _prefill_one(self, slot: int, req: Request):
         """Per-slot exact-length prefill (recurrent families / reference
         mode; ring cache only). The slot's cache row is reset first:
         recurrent state and the KV ``pos`` ring of the previous occupant
         must not leak."""
-        t = len(req.prompt)
+        eff = self._eff_prompt(req)
+        t = len(eff)
         assert t < self.max_len, "admission rejects over-long prompts"
         fresh = init_cache(self.cfg, 1, self.max_len, kv_bits=self._kv_bits)
         self.cache = jax.tree.map(
             lambda c, f: c.at[slot:slot + 1].set(f.astype(c.dtype)),
             self.cache, fresh,
         )
-        tokens = jnp.asarray(req.prompt, jnp.int32)[None]
+        tokens = jnp.asarray(eff, jnp.int32)[None]
         positions = jnp.arange(t, dtype=jnp.int32)[None]
         row_cache = jax.tree.map(lambda c: c[slot:slot + 1], self.cache)
         logits, row_cache2, _ = forward(
@@ -431,12 +706,27 @@ class ServingEngine:
         tok0 = int(steps_mod.sample_tokens(
             logits[:, -1], self._next_key(), jnp.float32(self.temperature)
         )[0])
-        self._finish_admit(slot, req, t, tok0)
+        self._finish_admit(slot, req, eff, tok0)
 
-    def _finish_admit(self, slot: int, req: Request, prompt_len: int,
+    def _finish_admit(self, slot: int, req: Request, eff: np.ndarray,
                       tok0: int):
         """Prefill's last logits yield the FIRST generated token (standard
-        prefill->decode handoff)."""
+        prefill->decode handoff). A resumed request instead discards the
+        handoff sample — every one of its tokens was already sampled
+        before preemption (greedy makes the resample identical anyway) —
+        and continues decoding from its stored last token."""
+        prompt_len = len(eff)
+        if req._seq < 0:
+            self._seq_counter += 1
+            req._seq = self._seq_counter
+        if req.resume_prompt is not None:
+            req.resume_prompt = None
+            self.slots[slot] = req
+            self.slot_pos[slot] = prompt_len
+            self.slot_next[slot] = req.generated[-1]
+            self.active[slot] = True
+            self._slot_seq[slot] = req._seq
+            return
         req.generated.append(tok0)
         if req.done:
             self._release_pages(slot)
@@ -446,51 +736,111 @@ class ServingEngine:
         self.slot_pos[slot] = prompt_len
         self.slot_next[slot] = tok0
         self.active[slot] = True
+        self._slot_seq[slot] = req._seq
 
     # -- paged allocation --------------------------------------------------
+    def _note_peak(self):
+        used = self.num_pages - self._allocator.free_pages
+        if used > self.stats["peak_pages_used"]:
+            self.stats["peak_pages_used"] = used
+
     def _release_pages(self, slot: int):
-        """Return every page a slot holds (and cancel its unused growth
-        reservation) to the free list — the retire path."""
+        """Drop every page reference a slot holds (and cancel its unused
+        growth reservation); pages whose last reference this was return
+        to the free list and leave the prefix index — the retire and
+        preempt path."""
         if self.kv_mode != "paged":
             return
         held = self.page_table[slot][self.page_table[slot] >= 0]
         if held.size:
-            self._allocator.release(held)
+            self._deregister(self._allocator.release(held))
         if self.slot_reserved[slot]:
             self._allocator.cancel_reservation(int(self.slot_reserved[slot]))
         self.page_table[slot] = -1
         self.slot_pages[slot] = 0
         self.slot_reserved[slot] = 0
 
+    def _retire_slot(self, i: int, req: Request):
+        self._release_pages(i)
+        self.finished.append(req)
+        self.slots[i] = None
+        self.active[i] = False
+
+    def _preempt(self, j: int):
+        """Page-level preemption: release slot ``j``'s page refs and
+        re-queue its request for recompute-resume. The tokens it already
+        generated become part of the re-prefill prompt (the written-token
+        sequence), so when pages free up it completes token-identically —
+        preemption trades latency for correctness where force-retire
+        traded away the output."""
+        req = self.slots[j]
+        req.resume_prompt = self._written_tokens(j)
+        self._release_pages(j)
+        self.slots[j] = None
+        self.active[j] = False
+        self.queue.appendleft(req)
+        self.stats["preemptions"] += 1
+
+    def _alloc_or_preempt(self, i: int) -> Optional[int]:
+        """Allocate one page for slot ``i``'s next write. Under pool
+        pressure, preempt the YOUNGEST resident request (latest admission
+        sequence — its recompute costs the least and the oldest request
+        keeps strictly progressing, so there is no livelock) until a page
+        frees or slot ``i`` itself is the victim. A request that holds
+        the whole pool alone and still needs more can never complete and
+        is force-retired truncated — the only remaining truncation path.
+        Returns the page, or None if slot ``i`` no longer needs it."""
+        while True:
+            pages = self._allocator.alloc(1)
+            if pages is not None:
+                return pages[0]
+            active = np.nonzero(self.active)[0]
+            if len(active) <= 1:
+                req = self.slots[i]
+                req.truncated = True
+                self._retire_slot(i, req)
+                self.stats["oop_retired"] += 1
+                return None
+            victim = max(active, key=lambda j: self._slot_seq[j])
+            self._preempt(int(victim))
+            if victim == i:
+                return None
+
     def _grant_pages(self):
         """Before the tick's write at ``slot_pos[i]``, make sure the page
-        covering it exists. Reservation-admitted slots claim from their
-        reservation (never fails); under ``admission='optimistic'`` the
-        grant can find the pool dry — OOP policy: THAT slot is force-
-        retired (truncated=True) and its freed pages fund the remaining
-        slots, so serving always makes progress."""
+        covering it exists AND is exclusively held. Reservation-admitted
+        slots claim from their reservation (never fails); otherwise the
+        grant may preempt younger slots (see ``_alloc_or_preempt``).
+        Copy-on-write happens at ADMISSION (``_paged_bind`` forks matched
+        partial tails before the prefill write), so by the time decode
+        runs, the cursor's page is always exclusive — asserted below."""
         for i in np.nonzero(self.active)[0]:
+            if not self.active[i]:
+                continue  # preempted while serving an earlier grant
             block = int(self.slot_pos[i]) // self.page_size
             if block < int(self.slot_pages[i]):
+                # the cursor page must be exclusively held: shared full
+                # blocks always end at or before the prefill start (the
+                # cursor only moves forward from there), partial tails
+                # are COW-forked at admission, and decode-completed
+                # blocks are indexed only once the cursor has left them.
+                # Any future mapping path that breaks this must fork the
+                # page BEFORE the write (see _paged_bind) — fail loudly.
+                page = int(self.page_table[i, block])
+                assert self._allocator.refcount[page] == 1, (
+                    "write cursor reached a shared page", i, block, page)
                 continue
             if self.slot_reserved[i] > 0:
                 page = self._allocator.claim_reserved(1)[0]
                 self.slot_reserved[i] -= 1
             else:
-                pages = self._allocator.alloc(1)
-                if pages is None:
-                    req = self.slots[i]
-                    req.truncated = True
-                    self._release_pages(i)
-                    self.finished.append(req)
-                    self.slots[i] = None
-                    self.active[i] = False
-                    self.stats["oop_retired"] += 1
+                page = self._alloc_or_preempt(int(i))
+                if page is None:
                     continue
-                page = pages[0]
             self.page_table[i, block] = page
             self.slot_pages[i] = block + 1
             self.stats["page_grants"] += 1
+        self._note_peak()
 
     def _pow2_width(self, pages: int) -> int:
         """Page-table width bucket covering ``pages``: next power of two,
@@ -521,7 +871,7 @@ class ServingEngine:
         if self.kv_mode == "paged":
             self._grant_pages()
             if not self.active.any():
-                return True  # progress: pool-exhausted slots were retired
+                return True  # progress: slots were preempted or retired
         if self.decode_mode == "ragged":
             args = [
                 self.params,
@@ -537,20 +887,29 @@ class ServingEngine:
             next_ids = np.asarray(next_ids)  # the ONE host sync per tick
         else:
             next_ids = self._decode_rows_reference()
+        ps = self.page_size
         for i in np.nonzero(self.active)[0]:
             req = self.slots[i]
             req.generated.append(int(next_ids[i]))
             self.slot_pos[i] += 1
             self.slot_next[i] = int(next_ids[i])
+            pos = int(self.slot_pos[i])
+            if self.prefix_sharing and pos % ps == 0:
+                # a decode just completed a full page: index it, so a
+                # follow-up request whose prompt extends this request's
+                # (prompt + generation so far) shares instead of
+                # re-prefilling — the multi-turn continuation pattern
+                b = pos // ps - 1
+                page = int(self.page_table[i, b])
+                if page >= 0 and self._register_block(
+                        self._written_tokens(int(i)), b, page):
+                    self._prefix_ready.add(page)
             if req.done or self.slot_pos[i] >= self.max_len:
                 if not req.done:
                     # bugfix: forced retirement at cache exhaustion used to
                     # be indistinguishable from natural completion
                     req.truncated = True
-                self._release_pages(i)
-                self.finished.append(req)
-                self.slots[i] = None
-                self.active[i] = False
+                self._retire_slot(int(i), req)
         return True
 
     def _decode_rows_reference(self) -> np.ndarray:
@@ -593,6 +952,14 @@ class ServingEngine:
         self.page_table[:] = -1
         self.slot_pages[:] = 0
         self.slot_reserved[:] = 0
+        self._slot_seq[:] = 0
+        self._seq_counter = 0
+        self._prefix_index.clear()
+        self._page_key.clear()
+        self._page_parent.clear()
+        self._page_block.clear()
+        self._prefix_children.clear()
+        self._prefix_ready.clear()
         for k in self.stats:
             self.stats[k] = 0
 

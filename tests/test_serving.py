@@ -1,26 +1,18 @@
-"""Serving engine: continuous batching + SAMD-quantized weights."""
+"""Serving engine: continuous batching + SAMD-quantized weights.
+
+Engine construction and the mixed-arrival workload live in the shared
+``serving`` fixture (tests/conftest.py) — the prefix-sharing/preemption
+suite (test_serving_prefix.py) and this file use the same harness.
+"""
 import numpy as np
 import pytest
 
-from repro.configs import smoke_config
 from repro.quant.config import QuantConfig
-from repro.serving import Request, ServingEngine
+from repro.serving import Request
 
 
-def _cfg():
-    return smoke_config("qwen1.5-0.5b").scaled(
-        n_layers=2, d_model=64, vocab=256, n_heads=4, n_kv_heads=4,
-        head_dim=16, d_ff=128,
-    )
-
-
-def _engine(quant=None, max_batch=2, **kw):
-    return ServingEngine(_cfg(), quant=quant, max_batch=max_batch,
-                         max_len=64, **kw)
-
-
-def test_serves_requests_to_completion():
-    eng = _engine()
+def test_serves_requests_to_completion(serving):
+    eng = serving.engine()
     rng = np.random.default_rng(0)
     for i in range(4):
         eng.submit(Request(rid=i,
@@ -33,9 +25,9 @@ def test_serves_requests_to_completion():
         assert all(0 <= t < 256 for t in req.generated)
 
 
-def test_continuous_batching_overlap():
+def test_continuous_batching_overlap(serving):
     """More requests than slots: finished slots must be refilled."""
-    eng = _engine(max_batch=2)
+    eng = serving.engine(max_batch=2)
     rng = np.random.default_rng(1)
     for i in range(5):
         eng.submit(Request(rid=i, prompt=rng.integers(0, 256, size=4),
@@ -44,22 +36,22 @@ def test_continuous_batching_overlap():
     assert sorted(r.rid for r in done) == [0, 1, 2, 3, 4]
 
 
-def test_greedy_decode_is_deterministic():
+def test_greedy_decode_is_deterministic(serving):
     outs = []
     for _ in range(2):
-        eng = _engine()
+        eng = serving.engine()
         eng.submit(Request(rid=0, prompt=np.arange(6) % 256, max_tokens=5))
         done = eng.run_to_completion()
         outs.append(done[0].generated)
     assert outs[0] == outs[1]
 
 
-def test_ragged_mixed_positions_match_per_row_reference():
+def test_ragged_mixed_positions_match_per_row_reference(serving):
     """Slots refilled mid-stream => mixed positions: the fused ragged step
     must produce token-for-token the same output as the per-row reference
     path, without a single per-row forward call."""
     def run(mode):
-        eng = _engine(max_batch=2, decode_mode=mode)
+        eng = serving.engine(max_batch=2, decode_mode=mode)
         # staggered prompt lengths + max_tokens force refills while the
         # surviving slot is mid-decode (positions diverge immediately)
         for i in range(5):
@@ -75,13 +67,13 @@ def test_ragged_mixed_positions_match_per_row_reference():
     assert stats["decode_steps"] > 0
 
 
-def test_batched_prefill_matches_per_slot_prefill():
+def test_batched_prefill_matches_per_slot_prefill(serving):
     """Admitting N prompts in one bucket-padded forward must yield the same
     first generated token as per-slot exact-length prefill."""
     prompts = [(np.arange(3 + 4 * i) * 11 + i) % 256 for i in range(3)]
 
     def first_tokens(mode):
-        eng = _engine(max_batch=3, decode_mode=mode)
+        eng = serving.engine(max_batch=3, decode_mode=mode)
         for i, p in enumerate(prompts):
             # max_tokens=1 => the full output IS the prefill handoff token
             eng.submit(Request(rid=i, prompt=p, max_tokens=1))
@@ -96,10 +88,10 @@ def test_batched_prefill_matches_per_slot_prefill():
     assert stats["per_row_prefill_calls"] == 0
 
 
-def test_mixed_position_tick_is_one_compiled_step():
+def test_mixed_position_tick_is_one_compiled_step(serving):
     """Acceptance: a tick over slots at different positions runs exactly
     one fused decode invocation and zero per-row forwards."""
-    eng = _engine(max_batch=3)
+    eng = serving.engine(max_batch=3)
     for i in range(3):
         eng.submit(Request(rid=i, prompt=(np.arange(3 + 3 * i) + i) % 256,
                            max_tokens=8))
@@ -113,19 +105,19 @@ def test_mixed_position_tick_is_one_compiled_step():
     assert eng.stats["prefill_calls"] == before["prefill_calls"]
 
 
-def test_slot_reset_no_stale_kv_leak():
+def test_slot_reset_no_stale_kv_leak(serving):
     """A refilled slot must not attend to the previous occupant's KV rows:
     a short prompt served after a long one in the same slot must match the
     same prompt served in a fresh engine."""
     long_prompt = (np.arange(40) * 3) % 256
     short_prompt = (np.arange(5) * 5) % 256
 
-    eng = _engine(max_batch=1)
+    eng = serving.engine(max_batch=1)
     eng.submit(Request(rid=0, prompt=long_prompt, max_tokens=4))
     eng.submit(Request(rid=1, prompt=short_prompt, max_tokens=4))
     reused = {r.rid: r.generated for r in eng.run_to_completion()}
 
-    fresh = _engine(max_batch=1)
+    fresh = serving.engine(max_batch=1)
     fresh.submit(Request(rid=1, prompt=short_prompt, max_tokens=4))
     expect = {r.rid: r.generated for r in fresh.run_to_completion()}
     assert reused[1] == expect[1]
@@ -135,6 +127,9 @@ def test_slot_reset_no_stale_kv_leak():
 def test_recurrent_family_ragged_decode(family_arch):
     """Recurrent families prefill per-slot but decode through the fused
     ragged step (their state is position-free)."""
+    from repro.configs import smoke_config
+    from repro.serving import ServingEngine
+
     cfg = smoke_config(family_arch)
     eng = ServingEngine(cfg, max_batch=2, max_len=48)
     rng = np.random.default_rng(0)
@@ -148,10 +143,10 @@ def test_recurrent_family_ragged_decode(family_arch):
     assert eng.stats["decode_steps"] > 0
 
 
-def test_pallas_backend_serves_through_ragged_step():
+def test_pallas_backend_serves_through_ragged_step(serving):
     """The SAMD Pallas packed-matmul kernel (interpret mode on CPU) feeds
     the decode linears inside the fused ragged step."""
-    eng = _engine(quant=QuantConfig(bits=4, backend="pallas"))
+    eng = serving.engine(quant=QuantConfig(bits=4, backend="pallas"))
     eng.submit(Request(rid=0, prompt=np.arange(6) % 256, max_tokens=3))
     eng.submit(Request(rid=1, prompt=np.arange(9) % 256, max_tokens=3))
     done = eng.run_to_completion()
@@ -160,10 +155,10 @@ def test_pallas_backend_serves_through_ragged_step():
     assert eng.stats["per_row_forward_calls"] == 0
 
 
-def test_int8_kv_cache_ragged_decode():
+def test_int8_kv_cache_ragged_decode(serving):
     """kv_bits=8: the ragged scatter writes quantized KV + per-(token,
     head) scales; mixed-position decode must still complete fused."""
-    eng = _engine(quant=QuantConfig(bits=8, kv_bits=8))
+    eng = serving.engine(quant=QuantConfig(bits=8, kv_bits=8))
     for i in range(3):
         eng.submit(Request(rid=i, prompt=(np.arange(4 + 3 * i) + i) % 256,
                            max_tokens=4))
@@ -177,39 +172,17 @@ def test_int8_kv_cache_ragged_decode():
 # paged KV cache
 # ---------------------------------------------------------------------------
 
-def _mixed_arrival_run(eng, n_reqs=6, arrive_every=2, seed=3):
-    """Continuous-batching traffic with MID-STREAM refills: an initial
-    burst fills the slots, later requests arrive while survivors are
-    mid-decode, so slots are refilled at mixed positions."""
-    rng = np.random.default_rng(seed)
-    reqs = [Request(rid=i,
-                    prompt=(np.arange(3 + int(rng.integers(0, 12))) * 7 + i)
-                    % 256,
-                    max_tokens=3 + int(rng.integers(0, 5)))
-            for i in range(n_reqs)]
-    pending = list(reqs)
-    for _ in range(min(len(pending), eng.max_batch)):
-        eng.submit(pending.pop(0))
-    ticks = 0
-    while pending or eng.queue or any(s is not None for s in eng.slots):
-        if pending and ticks % arrive_every == 0:
-            eng.submit(pending.pop(0))
-        eng.step()
-        ticks += 1
-        assert ticks < 2_000
-    return {r.rid: r.generated for r in eng.finished}
 
-
-def test_paged_is_default_and_matches_ring_under_midstream_refills():
+def test_paged_is_default_and_matches_ring_under_midstream_refills(serving):
     """Acceptance: the paged cache (the default) must produce token-
     identical greedy output to the PR 1 ring cache under mixed-arrival
     continuous batching, with zero per-row fallbacks."""
-    eng_paged = _engine(max_batch=2)
+    eng_paged = serving.engine(max_batch=2)
     assert eng_paged.kv_mode == "paged", "paged must be the default"
-    got = _mixed_arrival_run(eng_paged)
+    got = serving.mixed_arrival_run(eng_paged)
 
-    eng_ring = _engine(max_batch=2, kv_mode="ring")
-    ref = _mixed_arrival_run(eng_ring)
+    eng_ring = serving.engine(max_batch=2, kv_mode="ring")
+    ref = serving.mixed_arrival_run(eng_ring)
 
     assert got == ref
     assert eng_paged.stats["per_row_forward_calls"] == 0
@@ -217,10 +190,10 @@ def test_paged_is_default_and_matches_ring_under_midstream_refills():
     assert eng_paged.stats["prefill_calls"] > 0
 
 
-def test_paged_page_grants_cross_boundaries():
+def test_paged_page_grants_cross_boundaries(serving):
     """A long decode crosses page boundaries: pages are granted
     incrementally and freed on retirement."""
-    eng = _engine(max_batch=2, page_size=8)
+    eng = serving.engine(max_batch=2, page_size=8)
     eng.submit(Request(rid=0, prompt=np.arange(10) % 256, max_tokens=20))
     done = eng.run_to_completion()
     assert len(done) == 1 and len(done[0].generated) == 20
@@ -230,12 +203,14 @@ def test_paged_page_grants_cross_boundaries():
     assert (eng.page_table == -1).all()
 
 
-def test_paged_pool_exhaustion_truncates_not_crashes():
-    """OOP policy (optimistic admission): when the pool runs dry the
-    granting slot is force-retired with truncated=True and the engine
-    keeps serving — the freed pages fund the remaining traffic."""
-    eng = _engine(max_batch=2, page_size=8, num_pages=3,
-                  admission="optimistic")
+def test_paged_pool_exhaustion_truncates_not_crashes(serving):
+    """Last-resort OOP policy (optimistic admission): an INFEASIBLE
+    request — one that holds the entire pool alone and still needs more
+    pages — is force-retired with truncated=True and the engine keeps
+    serving. (Feasible requests are preempted + resumed instead; see
+    test_serving_prefix.py.)"""
+    eng = serving.engine(max_batch=2, page_size=8, num_pages=3,
+                         admission="optimistic")
     eng.submit(Request(rid=0, prompt=np.arange(12) % 256, max_tokens=30))
     eng.submit(Request(rid=1, prompt=np.arange(12) % 256, max_tokens=30))
     done = eng.run_to_completion()
@@ -247,11 +222,11 @@ def test_paged_pool_exhaustion_truncates_not_crashes():
     assert eng._allocator.free_pages == eng.num_pages
 
 
-def test_paged_reserve_admission_never_truncates_feasible_requests():
+def test_paged_reserve_admission_never_truncates_feasible_requests(serving):
     """Default admission reserves worst-case growth: the same pressure
-    that OOP-truncates under optimistic admission instead serializes the
+    that preempts under optimistic admission instead serializes the
     requests and serves both IN FULL."""
-    eng = _engine(max_batch=2, page_size=8, num_pages=6)
+    eng = serving.engine(max_batch=2, page_size=8, num_pages=6)
     eng.submit(Request(rid=0, prompt=np.arange(12) % 256, max_tokens=30))
     eng.submit(Request(rid=1, prompt=np.arange(12) % 256, max_tokens=30))
     done = eng.run_to_completion()
@@ -264,12 +239,12 @@ def test_paged_reserve_admission_never_truncates_feasible_requests():
     assert eng._allocator.reserved == 0
 
 
-def test_paged_reserve_horizon_exact_fit():
+def test_paged_reserve_horizon_exact_fit(serving):
     """Off-by-one guard: a request whose writes fill the pool EXACTLY
     (len + max_tokens - 1 positions; the final sampled token is never
     written back) must be admitted and served in full, not rejected as
     infeasible."""
-    eng = _engine(max_batch=1, page_size=8, num_pages=5)
+    eng = serving.engine(max_batch=1, page_size=8, num_pages=5)
     # writes reach position 8 + 33 - 2 = 39 -> 40 slots = exactly 5 pages
     eng.submit(Request(rid=0, prompt=np.arange(8) % 256, max_tokens=33))
     done = eng.run_to_completion()
@@ -278,10 +253,10 @@ def test_paged_reserve_horizon_exact_fit():
     assert len(done[0].generated) == 33
 
 
-def test_paged_infeasible_request_rejected_not_deadlocked():
+def test_paged_infeasible_request_rejected_not_deadlocked(serving):
     """A request whose worst case can never fit the pool must be rejected
     with ``error`` instead of waiting at the queue head forever."""
-    eng = _engine(max_batch=2, page_size=8, num_pages=2)
+    eng = serving.engine(max_batch=2, page_size=8, num_pages=2)
     eng.submit(Request(rid=0, prompt=np.arange(30) % 256, max_tokens=30))
     eng.submit(Request(rid=1, prompt=np.arange(5) % 256, max_tokens=3))
     done = {r.rid: r for r in eng.run_to_completion(max_ticks=200)}
@@ -290,23 +265,24 @@ def test_paged_infeasible_request_rejected_not_deadlocked():
     assert done[1].error is None and len(done[1].generated) == 3
 
 
-def test_paged_smaller_pool_smaller_footprint():
+def test_paged_smaller_pool_smaller_footprint(serving):
     """The point of paging: a pool sized below max_batch*max_len shrinks
     resident KV bytes."""
-    ring = _engine(max_batch=2, kv_mode="ring")
-    full = _engine(max_batch=2)                      # full-coverage pool
-    half = _engine(max_batch=2, num_pages=full.num_pages // 2)
+    ring = serving.engine(max_batch=2, kv_mode="ring")
+    full = serving.engine(max_batch=2)                # full-coverage pool
+    half = serving.engine(max_batch=2, num_pages=full.num_pages // 2)
     assert half.kv_cache_bytes() < ring.kv_cache_bytes()
     assert full.kv_cache_bytes() <= ring.kv_cache_bytes()
 
 
-def test_paged_int8_kv_matches_ring_int8():
+def test_paged_int8_kv_matches_ring_int8(serving):
     """kv_bits=8 paged pools (SAMD-packed uint32 pages + scale pages) stay
     token-identical to the int8 ring."""
     q = QuantConfig(bits=8, kv_bits=8)
-    got = _mixed_arrival_run(_engine(max_batch=2, quant=q), n_reqs=4)
-    ref = _mixed_arrival_run(_engine(max_batch=2, quant=q, kv_mode="ring"),
-                             n_reqs=4)
+    got = serving.mixed_arrival_run(
+        serving.engine(max_batch=2, quant=q), n_reqs=4)
+    ref = serving.mixed_arrival_run(
+        serving.engine(max_batch=2, quant=q, kv_mode="ring"), n_reqs=4)
     assert got == ref
 
 
@@ -314,64 +290,68 @@ def test_paged_int8_kv_matches_ring_int8():
 # fused paged-attention decode (Pallas kernel) vs the gather reference
 # ---------------------------------------------------------------------------
 
-def test_fused_paged_attention_is_default():
-    eng = _engine(max_batch=2)
+
+def test_fused_paged_attention_is_default(serving):
+    eng = serving.engine(max_batch=2)
     assert eng.kv_mode == "paged"
     assert eng.paged_attn == "fused", \
         "the fused Pallas kernel must be the default paged decode path"
 
 
-def test_fused_paged_decode_token_identical_to_gather_reference():
+def test_fused_paged_decode_token_identical_to_gather_reference(serving):
     """Acceptance: the fused kernel path must produce token-for-token the
     same greedy output as the dense ``_paged_gather`` reference path under
     mixed-arrival continuous batching (mid-stream refills, ragged
     positions, partially filled last pages)."""
-    eng_fused = _engine(max_batch=2)
-    got = _mixed_arrival_run(eng_fused)
-    ref = _mixed_arrival_run(_engine(max_batch=2, paged_attn="gather"))
+    eng_fused = serving.engine(max_batch=2)
+    got = serving.mixed_arrival_run(eng_fused)
+    ref = serving.mixed_arrival_run(
+        serving.engine(max_batch=2, paged_attn="gather"))
     assert got == ref
     assert eng_fused.stats["decode_steps"] > 0
     assert eng_fused.stats["per_row_forward_calls"] == 0
 
 
-def test_fused_paged_int8_kv_token_identical_to_gather_reference():
+def test_fused_paged_int8_kv_token_identical_to_gather_reference(serving):
     """Same acceptance for the SAMD-packed int8 KV pools: in-kernel lane
     unpack must match the gather path's unpack-after-gather exactly."""
     q = QuantConfig(bits=8, kv_bits=8)
-    got = _mixed_arrival_run(_engine(max_batch=2, quant=q), n_reqs=4)
-    ref = _mixed_arrival_run(
-        _engine(max_batch=2, quant=q, paged_attn="gather"), n_reqs=4)
+    got = serving.mixed_arrival_run(
+        serving.engine(max_batch=2, quant=q), n_reqs=4)
+    ref = serving.mixed_arrival_run(
+        serving.engine(max_batch=2, quant=q, paged_attn="gather"), n_reqs=4)
     assert got == ref
 
 
-def test_fused_paged_decode_matches_ring_and_per_row():
+def test_fused_paged_decode_matches_ring_and_per_row(serving):
     """Transitivity spot-check straight to the PR 1 ring and the per-row
     reference: the whole serving stack agrees on greedy tokens."""
-    got = _mixed_arrival_run(_engine(max_batch=2), n_reqs=4)
-    ring = _mixed_arrival_run(_engine(max_batch=2, kv_mode="ring"),
-                              n_reqs=4)
-    per_row = _mixed_arrival_run(
-        _engine(max_batch=2, decode_mode="per_row", kv_mode="ring"),
+    got = serving.mixed_arrival_run(serving.engine(max_batch=2), n_reqs=4)
+    ring = serving.mixed_arrival_run(
+        serving.engine(max_batch=2, kv_mode="ring"), n_reqs=4)
+    per_row = serving.mixed_arrival_run(
+        serving.engine(max_batch=2, decode_mode="per_row", kv_mode="ring"),
         n_reqs=4)
     assert got == ring == per_row
 
 
 # (page-reuse staleness under the fused kernel is covered by
-# test_paged_no_stale_kv_across_page_reuse below — fused is the default)
+# test_paged_no_stale_kv_across_page_reuse below — fused is the default;
+# the refcounted/shared-page variant lives in test_serving_prefix.py)
 
 
-def test_paged_no_stale_kv_across_page_reuse():
+def test_paged_no_stale_kv_across_page_reuse(serving):
     """Pages freed by a retired request and reallocated to a new one must
     not leak the old KV: same-prompt output must match a fresh engine."""
     long_prompt = (np.arange(40) * 3) % 256
     short_prompt = (np.arange(5) * 5) % 256
 
-    eng = _engine(max_batch=1, page_size=8)
+    eng = serving.engine(max_batch=1, page_size=8)
     eng.submit(Request(rid=0, prompt=long_prompt, max_tokens=4))
     eng.submit(Request(rid=1, prompt=short_prompt, max_tokens=4))
     reused = {r.rid: r.generated for r in eng.run_to_completion()}
 
-    fresh = _engine(max_batch=1, page_size=8)
+    fresh = serving.engine(max_batch=1, page_size=8)
     fresh.submit(Request(rid=1, prompt=short_prompt, max_tokens=4))
     expect = {r.rid: r.generated for r in fresh.run_to_completion()}
     assert reused[1] == expect[1]
@@ -381,12 +361,13 @@ def test_paged_no_stale_kv_across_page_reuse():
 # crash-on-long-prompt and silent-truncation regressions
 # ---------------------------------------------------------------------------
 
-def test_overlong_prompt_rejected_gracefully():
+
+def test_overlong_prompt_rejected_gracefully(serving):
     """Regression: a prompt with len >= max_len used to trip an assert in
     the prefill path and kill the whole engine mid-tick, losing every
     in-flight request. It must now be rejected (finished with ``error``)
     while everything else keeps serving."""
-    eng = _engine(max_batch=2)  # max_len=64
+    eng = serving.engine(max_batch=2)  # max_len=64
     eng.submit(Request(rid=0, prompt=np.arange(5) % 256, max_tokens=4))
     eng.submit(Request(rid=1, prompt=np.arange(64) % 256, max_tokens=4))
     eng.submit(Request(rid=2, prompt=np.arange(100) % 256, max_tokens=4))
@@ -402,10 +383,10 @@ def test_overlong_prompt_rejected_gracefully():
     assert eng.stats["rejected"] == 2
 
 
-def test_overlong_prompt_rejected_per_slot_prefill_path():
+def test_overlong_prompt_rejected_per_slot_prefill_path(serving):
     """Same regression through the per-slot prefill path (recurrent
     families / per_row reference mode)."""
-    eng = _engine(max_batch=2, decode_mode="per_row")
+    eng = serving.engine(max_batch=2, decode_mode="per_row")
     assert eng.kv_mode == "ring"
     eng.submit(Request(rid=0, prompt=np.arange(70) % 256, max_tokens=3))
     eng.submit(Request(rid=1, prompt=np.arange(4) % 256, max_tokens=3))
@@ -414,11 +395,11 @@ def test_overlong_prompt_rejected_per_slot_prefill_path():
     assert done[1].error is None and len(done[1].generated) == 3
 
 
-def test_forced_retirement_sets_truncated_flag():
+def test_forced_retirement_sets_truncated_flag(serving):
     """Regression: slots force-retired at cache exhaustion used to land in
     ``finished`` indistinguishable from naturally completed requests."""
     for kv_mode in ("paged", "ring"):
-        eng = _engine(max_batch=2, kv_mode=kv_mode)  # max_len=64
+        eng = serving.engine(max_batch=2, kv_mode=kv_mode)  # max_len=64
         # rid 0 wants more tokens than the cache can hold -> truncated
         eng.submit(Request(rid=0, prompt=np.arange(10) % 256,
                            max_tokens=500))
@@ -432,14 +413,14 @@ def test_forced_retirement_sets_truncated_flag():
 
 
 @pytest.mark.parametrize("bits", [4, 8])
-def test_quantized_engine_close_to_fp(bits):
+def test_quantized_engine_close_to_fp(bits, serving):
     """SAMD-packed serving produces (mostly) the same greedy tokens."""
     prompt = (np.arange(8) * 3) % 256
-    eng_fp = _engine()
+    eng_fp = serving.engine()
     eng_fp.submit(Request(rid=0, prompt=prompt, max_tokens=6))
     ref = eng_fp.run_to_completion()[0].generated
 
-    eng_q = _engine(quant=QuantConfig(bits=bits))
+    eng_q = serving.engine(quant=QuantConfig(bits=bits))
     eng_q.submit(Request(rid=0, prompt=prompt, max_tokens=6))
     got = eng_q.run_to_completion()[0].generated
     agree = sum(a == b for a, b in zip(ref, got)) / len(ref)

@@ -1,0 +1,293 @@
+"""Prefix sharing (copy-on-write pages) + page-level preemption.
+
+Uses the shared ``serving`` harness from conftest.py. Acceptance contract
+(ISSUE 4): shared-prefix workloads serve token-identical to the ring with
+a fraction of the unique-page footprint, feasible requests NEVER truncate
+under pool pressure (preemption + recompute-resume instead), and recycled
+or COW-forked pages never leak stale KV.
+"""
+
+import numpy as np
+import pytest
+
+from repro.quant.config import QuantConfig
+from repro.serving import Request
+
+
+def _gen(serving, prompts_tokens, **engine_kw):
+    """Serve a list of (prompt, max_tokens) on a fresh engine; return
+    ({rid: generated}, engine)."""
+    eng = serving.engine(**engine_kw)
+    for i, (p, mt) in enumerate(prompts_tokens):
+        eng.submit(Request(rid=i, prompt=np.asarray(p), max_tokens=mt))
+    return {r.rid: r.generated for r in eng.run_to_completion()}, eng
+
+
+# ---------------------------------------------------------------------------
+# prefix sharing
+# ---------------------------------------------------------------------------
+
+
+def test_same_batch_prefix_sharing_token_identical(serving):
+    """Two same-tick admissions with a common 2-page prefix: the second
+    maps the first's pages (refcounted) instead of re-prefilling them,
+    and output stays token-identical to unshared serving."""
+    common = (np.arange(40) * 3) % 256
+    work = [(common, 6), (common.copy(), 6)]
+    got, eng = _gen(serving, list(work), max_batch=2, page_size=16)
+    assert eng.stats["prefix_hits"] >= 2  # 2 full pages mapped
+    assert eng.stats["prefix_tokens_saved"] >= 32
+    ref, _ = _gen(
+        serving, list(work), max_batch=2, page_size=16, prefix_sharing=False
+    )
+    assert got == ref
+    ring, _ = _gen(
+        serving, list(work), max_batch=2, page_size=16, kv_mode="ring"
+    )
+    assert got == ring
+
+
+def test_cross_batch_sharing_and_cow_fork_mid_decode(serving):
+    """A follower arriving while the donor is MID-DECODE maps the donor's
+    resident prefix pages; its prompt ends inside a shared block, so that
+    block is copy-on-write forked (device page copy) before the
+    follower's first write lands in it. Both full-hit (prompt ends on a
+    page edge) and partial-tail (mid-page) fork shapes are exercised."""
+    common = (np.arange(44) * 5 + 1) % 256
+    for cut in (32, 20):  # full-hit fork (2 pages) / partial-tail fork
+        eng = serving.engine(max_batch=2, page_size=16)
+        eng.submit(Request(rid=0, prompt=common, max_tokens=12))
+        eng.step()
+        eng.step()  # donor mid-decode, pages resident + indexed
+        eng.submit(Request(rid=1, prompt=common[:cut].copy(), max_tokens=6))
+        done = {r.rid: r.generated for r in eng.run_to_completion()}
+        assert eng.stats["cow_forks"] >= 1, (cut, eng.stats)
+        assert eng.stats["prefix_hits"] >= 1
+        fresh, _ = _gen(
+            serving, [(common[:cut].copy(), 6)], max_batch=2, page_size=16
+        )
+        assert done[1] == fresh[0], cut
+        donor_alone, _ = _gen(
+            serving, [(common, 12)], max_batch=2, page_size=16
+        )
+        assert done[0] == donor_alone[0], cut
+        assert eng._allocator.free_pages == eng.num_pages
+        assert not eng._prefix_index, "index must drain with the pool"
+
+
+def test_shared_pages_survive_donor_retirement(serving):
+    """Refcounting keeps a shared page resident (and correct) after the
+    donor retires first; the pool fully drains only after the last
+    holder leaves."""
+    common = (np.arange(36) * 7 + 3) % 256
+    eng = serving.engine(max_batch=2, page_size=16)
+    eng.submit(Request(rid=0, prompt=common, max_tokens=2))  # donor: short
+    eng.submit(Request(rid=1, prompt=common.copy(), max_tokens=10))
+    done = {r.rid: r.generated for r in eng.run_to_completion()}
+    assert eng.stats["prefix_hits"] >= 2
+    fresh, _ = _gen(serving, [(common.copy(), 10)], max_batch=2, page_size=16)
+    assert done[1] == fresh[0]
+    assert eng._allocator.free_pages == eng.num_pages
+
+
+def test_prefix_sharing_shrinks_unique_page_footprint(serving):
+    """The sharing win the bench asserts, in miniature: a clustered
+    shared-prefix workload must hold far fewer unique pages at peak than
+    the same workload served without sharing."""
+    reqs = serving.shared_prefix_requests(
+        n_clusters=2, per_cluster=4, prefix_len=32, seed=11
+    )
+    copies = [Request(r.rid, r.prompt.copy(), r.max_tokens) for r in reqs]
+    shared_eng = serving.engine(max_batch=4, max_len=64, page_size=16)
+    got = serving.mixed_arrival_run(shared_eng, reqs=copies)
+    plain_eng = serving.engine(
+        max_batch=4, max_len=64, page_size=16, prefix_sharing=False
+    )
+    ref = serving.mixed_arrival_run(plain_eng, reqs=reqs)
+    assert got == ref
+    assert shared_eng.stats["prefix_hits"] > 0
+    shared_peak = shared_eng.stats["peak_pages_used"]
+    assert shared_peak < plain_eng.stats["peak_pages_used"]
+
+
+def test_decode_completed_pages_become_shareable(serving):
+    """Multi-turn continuation: a page completed BY DECODE is indexed, so
+    a follow-up whose prompt extends (prompt + generation) shares it."""
+    prompt = (np.arange(12) * 3 + 5) % 256
+    eng = serving.engine(max_batch=2, page_size=8)
+    eng.submit(Request(rid=0, prompt=prompt, max_tokens=14))
+    eng.step()
+    # drive rid 0 until decode has completed at least page 1 (pos >= 16)
+    while int(eng.slot_pos[0]) < 17:
+        eng.step()
+    written = eng._written_tokens(0)
+    follow = np.asarray(list(written[:16]) + [7, 9], np.int32)  # turn 2
+    eng.submit(Request(rid=1, prompt=follow, max_tokens=4))
+    done = {r.rid: r.generated for r in eng.run_to_completion()}
+    assert eng.stats["prefix_hits"] >= 2, eng.stats
+    fresh, _ = _gen(serving, [(follow.copy(), 4)], max_batch=2, page_size=8)
+    assert done[1] == fresh[0]
+
+
+# ---------------------------------------------------------------------------
+# stale-KV regressions for the refcounted path
+# ---------------------------------------------------------------------------
+
+
+def test_no_stale_kv_after_shared_pages_recycle(serving):
+    """Extends test_paged_no_stale_kv_across_page_reuse to refcounted
+    pages: after a shared page's LAST holder retires and the page is
+    recycled to a fresh request, that request must not observe the old
+    KV (and the prefix index must not resurrect it)."""
+    common = (np.arange(40) * 3) % 256
+    other = (np.arange(9) * 11 + 2) % 256
+    eng = serving.engine(max_batch=2, page_size=8)
+    # donor + two sharers (one forces a COW fork mid-decode), then retire
+    eng.submit(Request(rid=0, prompt=common, max_tokens=6))
+    eng.step()
+    eng.submit(Request(rid=1, prompt=common[:32].copy(), max_tokens=5))
+    eng.submit(Request(rid=2, prompt=common.copy(), max_tokens=4))
+    while eng.queue or any(s is not None for s in eng.slots):
+        eng.step()
+    assert eng.stats["prefix_hits"] > 0
+    assert eng.stats["cow_forks"] > 0
+    assert eng._allocator.free_pages == eng.num_pages
+    # every page was recycled; a fresh unrelated prompt must match a
+    # fresh engine exactly
+    eng.submit(Request(rid=3, prompt=other, max_tokens=6))
+    done = {r.rid: r.generated for r in eng.run_to_completion()}
+    fresh, _ = _gen(serving, [(other.copy(), 6)], max_batch=2, page_size=8)
+    assert done[3] == fresh[0]
+
+
+def test_cow_fork_does_not_corrupt_donor(serving):
+    """The fork must copy, not alias: the donor's continued decode after
+    a follower forked its partial block must be unchanged."""
+    common = (np.arange(28) * 9 + 4) % 256
+    solo, _ = _gen(serving, [(common, 14)], max_batch=2, page_size=8)
+    eng = serving.engine(max_batch=2, page_size=8)
+    eng.submit(Request(rid=0, prompt=common, max_tokens=14))
+    eng.step()
+    eng.submit(Request(rid=1, prompt=common[:12].copy(), max_tokens=4))
+    done = {r.rid: r.generated for r in eng.run_to_completion()}
+    assert eng.stats["cow_forks"] >= 1
+    assert done[0] == solo[0], "donor output corrupted by fork"
+
+
+# ---------------------------------------------------------------------------
+# page-level preemption (recompute-resume replaces force-retire)
+# ---------------------------------------------------------------------------
+
+
+def test_preemption_completes_feasible_requests_untruncated(serving):
+    """Acceptance: pool pressure that used to force-retire (truncate) now
+    preempts the youngest slot and re-queues it for recompute-resume —
+    every feasible request completes in full, token-identical to a
+    pressure-free run."""
+    prompts = [(np.arange(12) + 17 * i) % 256 for i in range(3)]
+    reqs = [(p, 20) for p in prompts]
+    pressured, eng = _gen(
+        serving,
+        list(reqs),
+        max_batch=2,
+        page_size=8,
+        num_pages=6,
+        admission="optimistic",
+        prefix_sharing=False,
+    )
+    assert eng.stats["preemptions"] > 0, eng.stats
+    assert eng.stats["oop_retired"] == 0
+    for r in eng.finished:
+        assert not r.truncated and r.error is None
+        assert len(r.generated) == 20
+    roomy, _ = _gen(
+        serving, list(reqs), max_batch=2, page_size=8, prefix_sharing=False
+    )
+    assert pressured == roomy
+    assert eng._allocator.free_pages == eng.num_pages
+
+
+def test_preemption_resume_rebuilds_exact_prefix(serving):
+    """A preempted request resumes by re-prefilling prompt + generated
+    tokens; with sharing on, its own surviving shared pages (or a
+    concurrent twin's) are remapped instead of recomputed."""
+    twin = (np.arange(20) * 3 + 1) % 256
+    reqs = [(twin, 18), (twin.copy(), 18)]
+    got, eng = _gen(
+        serving,
+        list(reqs),
+        max_batch=2,
+        page_size=8,
+        num_pages=7,
+        admission="optimistic",
+    )
+    assert eng.stats["preemptions"] > 0, eng.stats
+    for r in eng.finished:
+        assert not r.truncated and r.error is None
+        assert len(r.generated) == 18
+    roomy, _ = _gen(serving, list(reqs), max_batch=2, page_size=8)
+    assert got == roomy
+
+
+def test_infeasible_request_still_truncates_as_last_resort(serving):
+    """A request that can never fit the pool alone (horizon > pool) keeps
+    the truncation escape hatch — the engine must not livelock on it."""
+    eng = serving.engine(
+        max_batch=2, page_size=8, num_pages=3, admission="optimistic"
+    )
+    eng.submit(Request(rid=0, prompt=np.arange(12) % 256, max_tokens=40))
+    done = eng.run_to_completion(max_ticks=500)
+    assert len(done) == 1 and done[0].truncated
+    assert done[0].generated
+    assert eng.stats["oop_retired"] == 1
+    assert eng._allocator.free_pages == eng.num_pages
+
+
+# ---------------------------------------------------------------------------
+# randomized serving soak (slow: dedicated CI step)
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.slow
+@pytest.mark.parametrize("paged_attn", ["fused", "gather"])
+@pytest.mark.parametrize("kv_bits", [None, 8])
+def test_soak_shared_prefix_pressure_matches_ring(
+    serving, paged_attn, kv_bits
+):
+    """~40-request mixed-arrival workload with clustered shared prefixes
+    on a deliberately undersized pool (optimistic admission): every
+    request is feasible, so ALL must complete untruncated and
+    token-identical to the ring reference — across the fused and gather
+    backends, bf16 and SAMD-packed int8 KV pages."""
+    quant = QuantConfig(bits=8, kv_bits=8) if kv_bits else None
+    mk = dict(max_batch=4, max_len=64, page_size=8, quant=quant)
+
+    def workload():
+        return serving.shared_prefix_requests(
+            n_clusters=5,
+            per_cluster=8,
+            prefix_len=24,
+            suffix_lo=2,
+            suffix_hi=10,
+            tok_lo=3,
+            tok_hi=9,
+            seed=23,
+        )
+
+    # horizon of the largest request: 33 prompt + 8 tokens -> 6 pages;
+    # 14 pages cannot hold 4 full slots (4 * 6 = 24) -> real pressure
+    eng = serving.engine(
+        admission="optimistic", num_pages=14, paged_attn=paged_attn, **mk
+    )
+    got = serving.mixed_arrival_run(eng, reqs=workload(), arrive_every=1)
+    assert len(got) == 40
+    for r in eng.finished:
+        assert not r.truncated, (r.rid, eng.stats)
+        assert r.error is None, r.rid
+    assert eng.stats["prefix_hits"] > 0
+    assert eng.stats["per_row_forward_calls"] == 0
+    assert eng._allocator.free_pages == eng.num_pages
+
+    ring = serving.engine(kv_mode="ring", **mk)
+    ref = serving.mixed_arrival_run(ring, reqs=workload(), arrive_every=1)
+    assert got == ref, "soak output must be token-identical to the ring"
