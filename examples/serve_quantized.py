@@ -29,6 +29,10 @@ def main():
                     help="0 = greedy; >0 samples in-jit (Gumbel-max)")
     ap.add_argument("--requests", type=int, default=6)
     ap.add_argument("--max-batch", type=int, default=3)
+    ap.add_argument("--speculative", type=int, default=0, metavar="K",
+                    help="self-speculative decoding: an 8-bit SAMD draft "
+                         "proposes K tokens/slot/tick, verified in one "
+                         "fused multi-token step (0 = off)")
     args = ap.parse_args()
 
     cfg = get_arch("qwen1.5-0.5b").scaled(
@@ -38,7 +42,9 @@ def main():
     quant = (QuantConfig(bits=args.bits, backend=args.backend)
              if args.bits else None)
     eng = ServingEngine(cfg, quant=quant, max_batch=args.max_batch,
-                        max_len=160, temperature=args.temperature)
+                        max_len=160, temperature=args.temperature,
+                        speculative=args.speculative,
+                        draft_quant=QuantConfig(bits=8))
 
     n_bytes = sum(
         x.size * x.dtype.itemsize for x in jax.tree.leaves(eng.params)
@@ -65,6 +71,11 @@ def main():
     print(f"  KV: {eng.kv_mode} ({eng.num_pages} pages x {eng.page_size} "
           f"tokens, {eng.kv_cache_bytes()/1e6:.2f}MB resident, "
           f"{eng.stats['page_grants']} mid-decode grants)")
+    if args.speculative:
+        acc, prop = eng.stats["draft_accepted"], eng.stats["draft_proposed"]
+        print(f"  speculative: K={args.speculative}, "
+              f"{eng.stats['spec_ticks']} draft+verify ticks, "
+              f"accept rate {acc / max(prop, 1):.2f} ({acc}/{prop})")
     for r in sorted(done, key=lambda r: r.rid):
         flags = " [truncated]" if r.truncated else ""
         flags += f" [error: {r.error}]" if r.error else ""

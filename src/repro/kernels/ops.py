@@ -40,6 +40,9 @@ def paged_decode_attention(q: jax.Array, k_pages: jax.Array,
                            q_pos: jax.Array, *,
                            k_scale: jax.Array | None = None,
                            v_scale: jax.Array | None = None,
+                           extra_k: jax.Array | None = None,
+                           extra_v: jax.Array | None = None,
+                           extra_pos: jax.Array | None = None,
                            block_kv_heads: int | None = None,
                            interpret: bool | None = None) -> jax.Array:
     """Fused decode attention over the paged KV pool (no gathered copy).
@@ -55,7 +58,19 @@ def paged_decode_attention(q: jax.Array, k_pages: jax.Array,
     while the unrolled lowering vectorizes across slots. Pass
     ``interpret=True`` to force the Pallas interpreter (the CI
     equivalence tests do, so the kernel body itself stays covered).
+
+    ``extra_k``/``extra_v``/``extra_pos`` fold a small per-slot
+    out-of-pool KV window (the speculative draft's tick-local ring) into
+    the same online softmax, with ``q_pos`` bounding the POOL read. The
+    fold is implemented in the jnp lowering only — it is plain XLA, so
+    it compiles on every backend (TPU included) without a Pallas twin.
     """
+    if extra_k is not None:
+        return _pa.paged_decode_attention_xla(
+            q, k_pages, v_pages, page_table, q_pos,
+            k_scale=k_scale, v_scale=v_scale,
+            extra_k=extra_k, extra_v=extra_v, extra_pos=extra_pos,
+        )
     if interpret is None:
         if _default_interpret():
             return _pa.paged_decode_attention_xla(
@@ -64,6 +79,37 @@ def paged_decode_attention(q: jax.Array, k_pages: jax.Array,
             )
         interpret = False
     return _pa.paged_decode_attention(
+        q, k_pages, v_pages, page_table, q_pos,
+        k_scale=k_scale, v_scale=v_scale, block_kv_heads=block_kv_heads,
+        interpret=interpret,
+    )
+
+
+def paged_verify_attention(q: jax.Array, k_pages: jax.Array,
+                           v_pages: jax.Array, page_table: jax.Array,
+                           q_pos: jax.Array, *,
+                           k_scale: jax.Array | None = None,
+                           v_scale: jax.Array | None = None,
+                           block_kv_heads: int | None = None,
+                           interpret: bool | None = None) -> jax.Array:
+    """Multi-token-query paged attention (speculative verify block).
+
+    q [B, S, H, dh] with per-query positions q_pos [B, S] -> [B, S, H,
+    dh]. One grid step folds a whole pool page into all S query rows of
+    a slot, amortizing the page DMA/grid overhead across the verify
+    block. Backend dispatch mirrors ``paged_decode_attention``: TPU ->
+    Mosaic q-block kernel, CPU default -> unrolled-jnp lowering of the
+    same loop, ``interpret=True`` -> Pallas interpreter (CI coverage of
+    the kernel body).
+    """
+    if interpret is None:
+        if _default_interpret():
+            return _pa.paged_verify_attention_xla(
+                q, k_pages, v_pages, page_table, q_pos,
+                k_scale=k_scale, v_scale=v_scale,
+            )
+        interpret = False
+    return _pa.paged_verify_attention(
         q, k_pages, v_pages, page_table, q_pos,
         k_scale=k_scale, v_scale=v_scale, block_kv_heads=block_kv_heads,
         interpret=interpret,

@@ -184,6 +184,9 @@ def paged_decode_attention_xla(
     *,
     k_scale: jax.Array | None = None,
     v_scale: jax.Array | None = None,
+    extra_k: jax.Array | None = None,
+    extra_v: jax.Array | None = None,
+    extra_pos: jax.Array | None = None,
     mask_value: float = DEFAULT_MASK_VALUE,
 ) -> jax.Array:
     """The SAME page-loop algorithm lowered to straight-line jnp — the
@@ -198,6 +201,14 @@ def paged_decode_attention_xla(
     truncates the table to the pow2 used-width), and unrolling deletes
     the ~100us/step while-loop overhead XLA pays on CPU. Numerics match
     the kernel: f32 accumulation, pages folded in ascending order.
+
+    ``extra_k``/``extra_v`` [B, R, Hkv, dh] (+ ``extra_pos`` [B, R],
+    -1 = unwritten) fold a small per-slot out-of-pool KV window into the
+    same online softmax AFTER the pages — the self-speculative DRAFT
+    path, whose in-flight proposals live in a tick-local bf16 ring while
+    ``q_pos`` bounds the POOL read strictly below the draft window (the
+    pool may hold a previous tick's rejected-draft KV there). Plain jnp
+    throughout, so this fold runs as ordinary XLA on every backend.
     """
     b, h, dh = q.shape
     packed = k_pages.dtype == jnp.uint32
@@ -251,6 +262,27 @@ def paged_decode_attention_xla(
     )
     for j in range(n_pp):
         carry = body(carry, pt[:, j], j * page_size)
+    if extra_k is not None:
+        m, l_sum, acc = carry
+        ek = extra_k.astype(jnp.float32)
+        ev = extra_v.astype(jnp.float32)
+        s = jnp.einsum("bhgd,brhd->bhgr", qg, ek)
+        valid = extra_pos.astype(jnp.int32) >= 0  # written ring entries
+        s = jnp.where(valid[:, None, None, :], s, mask_value)
+        m_new = jnp.maximum(m, jnp.max(s, axis=-1))
+        alpha = jnp.exp(m - m_new)
+        pexp = jnp.exp(s - m_new[..., None])
+        l_new = l_sum * alpha + jnp.sum(pexp, axis=-1)
+        acc_new = acc * alpha[..., None] + jnp.einsum(
+            "bhgr,brhd->bhgd", pexp, ev
+        )
+        # rows with NO written ring entry keep their carry (same hazard
+        # as an invalid page: exp(mask - mask) == 1 would average noise)
+        keep = jnp.any(valid, axis=1)[:, None, None]
+        m = jnp.where(keep, m_new, m)
+        l_sum = jnp.where(keep, l_new, l_sum)
+        acc = jnp.where(keep[..., None], acc_new, acc)
+        carry = (m, l_sum, acc)
     _, l_sum, acc = carry
     out = acc / jnp.maximum(l_sum, 1e-30)[..., None]
     return out.reshape(b, h, dh).astype(q.dtype)
@@ -360,3 +392,291 @@ def paged_decode_attention(
         interpret=interpret,
     )(*operands)
     return out.reshape(b, h, dh)
+
+
+# ---------------------------------------------------------------------------
+# multi-token-query block: speculative verify (and multi-page amortization)
+# ---------------------------------------------------------------------------
+#
+# The speculative-decoding verify step scores a q-block of S = K+1 tokens
+# per slot (the pending token plus K draft proposals) against the same
+# paged pool in ONE pass. Each grid step now folds a whole page into S*G
+# query rows instead of G, amortizing the page DMA and the grid overhead
+# across the block — the ROADMAP's "multi-page compute blocks" follow-up
+# realized along the query axis. Per-query causal masking (offset <=
+# q_pos[s]) keeps every row token-identical to S independent decode
+# calls; rows whose position is -1 (slots past their draft budget) match
+# nothing and emit zeros.
+
+
+def _online_update_mq(
+    q, k, v, base, q_pos, page_size, mask_value, m_ref, l_ref, acc_ref
+):
+    """Fold one page of K/V into the q-block online-softmax state.
+
+    q [s, hkv, g, dh] f32 (pre-scaled); q_pos [s] per-query positions
+    (-1 = fully masked row); k/v [page_size, hkv, dh] f32.
+    """
+    s = jnp.einsum("qhgd,phd->qhgp", q, k)  # [s, hkv, g, page_size]
+    offs = base + jax.lax.broadcasted_iota(jnp.int32, (1, 1, 1, page_size), 3)
+    s = jnp.where(offs <= q_pos[:, None, None, None], s, mask_value)
+    m_prev = m_ref[...]
+    m_new = jnp.maximum(m_prev, jnp.max(s, axis=-1))
+    alpha = jnp.exp(m_prev - m_new)
+    p = jnp.exp(s - m_new[..., None])
+    # a fully-masked query row (q_pos -1: past the slot's draft budget)
+    # would see exp(mask - mask) == 1 everywhere and average page noise;
+    # zeroing its mass keeps l == 0 so the epilogue emits exact zeros
+    p = jnp.where(q_pos[:, None, None, None] >= 0, p, 0.0)
+    l_ref[...] = l_ref[...] * alpha + jnp.sum(p, axis=-1)
+    acc_ref[...] = acc_ref[...] * alpha[..., None] + jnp.einsum(
+        "qhgp,phd->qhgd", p, v
+    )
+    m_ref[...] = m_new
+
+
+def _kernel_bf16_mq(
+    pt_ref,
+    pos_ref,
+    q_ref,
+    k_ref,
+    v_ref,
+    o_ref,
+    m_ref,
+    l_ref,
+    acc_ref,
+    *,
+    page_size,
+    sm_scale,
+    mask_value,
+):
+    b, j = pl.program_id(0), pl.program_id(2)
+    page = pt_ref[b, j]
+    q_pos = pos_ref[b]  # [s] per-query positions
+    base = j * page_size
+    _init_scratch(j, m_ref, l_ref, acc_ref, mask_value)
+
+    @pl.when((page >= 0) & (base <= jnp.max(q_pos)))
+    def _accum():
+        q = q_ref[0].astype(jnp.float32) * sm_scale
+        k = k_ref[0].astype(jnp.float32)
+        v = v_ref[0].astype(jnp.float32)
+        _online_update_mq(
+            q, k, v, base, q_pos, page_size, mask_value, m_ref, l_ref, acc_ref
+        )
+
+    _store_out(j, o_ref, m_ref, l_ref, acc_ref)
+
+
+def _kernel_packed_mq(
+    pt_ref,
+    pos_ref,
+    q_ref,
+    k_ref,
+    ks_ref,
+    v_ref,
+    vs_ref,
+    o_ref,
+    m_ref,
+    l_ref,
+    acc_ref,
+    *,
+    page_size,
+    sm_scale,
+    mask_value,
+):
+    b, j = pl.program_id(0), pl.program_id(2)
+    page = pt_ref[b, j]
+    q_pos = pos_ref[b]
+    base = j * page_size
+    _init_scratch(j, m_ref, l_ref, acc_ref, mask_value)
+
+    @pl.when((page >= 0) & (base <= jnp.max(q_pos)))
+    def _accum():
+        q = q_ref[0].astype(jnp.float32) * sm_scale
+        ks = ks_ref[0][..., None]
+        vs = vs_ref[0][..., None]
+        k = _unpack_lanes(k_ref[0]).astype(jnp.float32) * ks
+        v = _unpack_lanes(v_ref[0]).astype(jnp.float32) * vs
+        _online_update_mq(
+            q, k, v, base, q_pos, page_size, mask_value, m_ref, l_ref, acc_ref
+        )
+
+    _store_out(j, o_ref, m_ref, l_ref, acc_ref)
+
+
+def paged_verify_attention_xla(
+    q: jax.Array,
+    k_pages: jax.Array,
+    v_pages: jax.Array,
+    page_table: jax.Array,
+    q_pos: jax.Array,
+    *,
+    k_scale: jax.Array | None = None,
+    v_scale: jax.Array | None = None,
+    mask_value: float = DEFAULT_MASK_VALUE,
+) -> jax.Array:
+    """Unrolled-jnp lowering of the multi-token-query page loop — the
+    non-TPU backend of ``ops.paged_verify_attention``. Same algorithm and
+    numerics as the q-block kernel: f32 accumulation, pages folded in
+    ascending order, per-query causal masks."""
+    b, sq, h, dh = q.shape
+    packed = k_pages.dtype == jnp.uint32
+    p, page_size, hkv = k_pages.shape[:3]
+    g = h // hkv
+    sm_scale = 1.0 / (dh**0.5)
+    qg = q.reshape(b, sq, hkv, g, dh).astype(jnp.float32) * sm_scale
+    pt = page_table.astype(jnp.int32)
+    pos = q_pos.astype(jnp.int32)  # [B, S]
+    row_max = jnp.max(pos, axis=1)  # last valid query per slot
+    n_pp = pt.shape[1]
+
+    def body(carry, page, base):
+        m, l_sum, acc = carry
+        safe = jnp.clip(page, 0, p - 1)
+        k = jnp.take(k_pages, safe, axis=0)
+        v = jnp.take(v_pages, safe, axis=0)
+        if packed:
+            ks = jnp.take(k_scale, safe, axis=0)[..., None]
+            vs = jnp.take(v_scale, safe, axis=0)[..., None]
+            k = _unpack_lanes(k).astype(jnp.float32) * ks
+            v = _unpack_lanes(v).astype(jnp.float32) * vs
+        else:
+            k = k.astype(jnp.float32)
+            v = v.astype(jnp.float32)
+        s = jnp.einsum("bqhgd,bphd->bqhgp", qg, k)
+        offs = base + jnp.arange(page_size, dtype=jnp.int32)
+        valid = (page[:, None, None] >= 0) & (
+            offs[None, None, :] <= pos[:, :, None]
+        )  # [B, S, page_size]
+        s = jnp.where(valid[:, :, None, None, :], s, mask_value)
+        m_new = jnp.maximum(m, jnp.max(s, axis=-1))
+        alpha = jnp.exp(m - m_new)
+        pexp = jnp.exp(s - m_new[..., None])
+        # fully-masked query rows (position -1) keep zero mass — the
+        # kernel-twin of the q-block's budget masking
+        pexp = jnp.where(pos[:, :, None, None, None] >= 0, pexp, 0.0)
+        l_new = l_sum * alpha + jnp.sum(pexp, axis=-1)
+        acc_new = acc * alpha[..., None] + jnp.einsum(
+            "bqhgp,bphd->bqhgd", pexp, v
+        )
+        keep = ((page >= 0) & (base <= row_max))[:, None, None, None]
+        m_new = jnp.where(keep, m_new, m)
+        l_new = jnp.where(keep, l_new, l_sum)
+        acc_new = jnp.where(keep[..., None], acc_new, acc)
+        return m_new, l_new, acc_new
+
+    carry = (
+        jnp.full((b, sq, hkv, g), mask_value, jnp.float32),
+        jnp.zeros((b, sq, hkv, g), jnp.float32),
+        jnp.zeros((b, sq, hkv, g, dh), jnp.float32),
+    )
+    for j in range(n_pp):
+        carry = body(carry, pt[:, j], j * page_size)
+    _, l_sum, acc = carry
+    out = acc / jnp.maximum(l_sum, 1e-30)[..., None]
+    return out.reshape(b, sq, h, dh).astype(q.dtype)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("block_kv_heads", "interpret", "mask_value")
+)
+def paged_verify_attention(
+    q: jax.Array,  # [B, S, H, dh] q-block (post-rope): pending + drafts
+    k_pages: jax.Array,  # [P, page_size, Hkv, dh] bf16/f32, or packed
+    v_pages: jax.Array,  # ...[P, page_size, Hkv, dh//4] uint32 (4 lanes)
+    page_table: jax.Array,  # [B, n_pp] int32; -1 = unallocated block
+    q_pos: jax.Array,  # [B, S] logical position per query; -1 = masked
+    *,
+    k_scale: jax.Array | None = None,
+    v_scale: jax.Array | None = None,
+    block_kv_heads: int | None = None,
+    interpret: bool = False,
+    mask_value: float = DEFAULT_MASK_VALUE,
+) -> jax.Array:
+    """Multi-token-query decode attention off the page pool: [B, S, H, dh].
+
+    The speculative-verify sibling of ``paged_decode_attention``: one grid
+    step folds a whole page into all S query rows of a slot (same scalar-
+    prefetched page resolution, same online-softmax scratch, now carrying
+    a leading query axis), so the page DMA and grid overhead are
+    amortized across the verify block instead of paid per token.
+    """
+    b, sq, h, dh = q.shape
+    packed = k_pages.dtype == jnp.uint32
+    if packed:
+        assert (
+            k_scale is not None and v_scale is not None
+        ), "packed int8 pools need per-(token, head) scales"
+        assert k_pages.shape[-1] * 4 == dh, (k_pages.shape, dh)
+    else:
+        assert k_pages.shape[-1] == dh, (k_pages.shape, dh)
+    _, page_size, hkv = k_pages.shape[:3]
+    g = h // hkv
+    assert g * hkv == h, (h, hkv)
+    n_pp = page_table.shape[1]
+    bh = block_kv_heads or hkv
+    assert hkv % bh == 0, (hkv, bh)
+    sm_scale = 1.0 / (dh**0.5)
+
+    qg = q.reshape(b, sq, hkv, g, dh)
+    pt = page_table.astype(jnp.int32)
+    pos = q_pos.astype(jnp.int32)
+    grid = (b, hkv // bh, n_pp)
+
+    def q_map(i, hb, j, pt_s, pos_s):
+        return (i, 0, hb, 0, 0)
+
+    def kv_map(i, hb, j, pt_s, pos_s):
+        return (jnp.maximum(pt_s[i, j], 0), 0, hb, 0)
+
+    def scale_map(i, hb, j, pt_s, pos_s):
+        return (jnp.maximum(pt_s[i, j], 0), 0, hb)
+
+    kv_width = k_pages.shape[-1]
+    if packed:
+        kernel = functools.partial(
+            _kernel_packed_mq,
+            page_size=page_size,
+            sm_scale=sm_scale,
+            mask_value=mask_value,
+        )
+        in_specs = [
+            pl.BlockSpec((1, sq, bh, g, dh), q_map),
+            pl.BlockSpec((1, page_size, bh, kv_width), kv_map),
+            pl.BlockSpec((1, page_size, bh), scale_map),
+            pl.BlockSpec((1, page_size, bh, kv_width), kv_map),
+            pl.BlockSpec((1, page_size, bh), scale_map),
+        ]
+        operands = (pt, pos, qg, k_pages, k_scale, v_pages, v_scale)
+    else:
+        kernel = functools.partial(
+            _kernel_bf16_mq,
+            page_size=page_size,
+            sm_scale=sm_scale,
+            mask_value=mask_value,
+        )
+        in_specs = [
+            pl.BlockSpec((1, sq, bh, g, dh), q_map),
+            pl.BlockSpec((1, page_size, bh, kv_width), kv_map),
+            pl.BlockSpec((1, page_size, bh, kv_width), kv_map),
+        ]
+        operands = (pt, pos, qg, k_pages, v_pages)
+
+    out = pl.pallas_call(
+        kernel,
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=2,
+            grid=grid,
+            in_specs=in_specs,
+            out_specs=pl.BlockSpec((1, sq, bh, g, dh), q_map),
+            scratch_shapes=[
+                pltpu.VMEM((sq, bh, g), jnp.float32),  # running max
+                pltpu.VMEM((sq, bh, g), jnp.float32),  # running denom
+                pltpu.VMEM((sq, bh, g, dh), jnp.float32),  # weighted V acc
+            ],
+        ),
+        out_shape=jax.ShapeDtypeStruct((b, sq, hkv, g, dh), q.dtype),
+        interpret=interpret,
+    )(*operands)
+    return out.reshape(b, sq, h, dh)

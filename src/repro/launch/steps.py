@@ -118,12 +118,38 @@ def make_serve_step(cfg: ArchConfig, run: RunConfig):
     return serve_step
 
 
+def _fold_row_keys(key: jax.Array, fold: jax.Array) -> jax.Array:
+    """Per-row sampling keys: ``fold_in(fold_in(key, fold[row]), row)``.
+
+    The ONE definition of the noise-stream derivation the serving paths
+    share: folding by the token's logical position makes every
+    (key, position) draw its own stream (so a jit that samples several
+    times — the speculative tick — never reuses noise, and a fixed
+    engine seed stays reproducible), and the extra row fold keeps two
+    slots that sit at the SAME position (identical prompts admitted
+    together) sampling independently.
+    """
+    rows = jnp.arange(fold.shape[0], dtype=jnp.int32)
+    return jax.vmap(
+        lambda r, f: jax.random.fold_in(jax.random.fold_in(key, f), r)
+    )(rows, fold.astype(jnp.int32))
+
+
 def sample_tokens(logits: jax.Array, key: jax.Array,
-                  temperature: jax.Array) -> jax.Array:
+                  temperature: jax.Array,
+                  fold: Optional[jax.Array] = None) -> jax.Array:
     """In-jit sampling: greedy at temperature == 0, Gumbel-max otherwise.
 
     One trace covers both (``temperature`` is a traced scalar), so the
     serving engine never recompiles when the sampling policy changes.
+
+    ``fold`` [B] (optional) derives each row's Gumbel noise from the
+    per-row streams of ``_fold_row_keys`` instead of one shared
+    [B, vocab] draw. Bugfix: a jit that samples MORE THAN ONCE from the
+    same key (the speculative tick: K draft samples + a verify resample)
+    would otherwise reuse IDENTICAL noise per call — with the same
+    logits that degenerates into repeating the same token. See
+    ``_fold_row_keys`` for the stream-derivation contract.
     """
     lf = logits.astype(jnp.float32)
 
@@ -131,7 +157,12 @@ def sample_tokens(logits: jax.Array, key: jax.Array,
         return jnp.argmax(lf, axis=-1)
 
     def sample(k):
-        g = jax.random.gumbel(k, lf.shape, jnp.float32)
+        if fold is None:
+            g = jax.random.gumbel(k, lf.shape, jnp.float32)
+        else:
+            g = jax.vmap(
+                lambda kk: jax.random.gumbel(kk, lf.shape[-1:], jnp.float32)
+            )(_fold_row_keys(k, fold))
         return jnp.argmax(lf / jnp.maximum(temperature, 1e-6) + g, axis=-1)
 
     # lax.cond: the greedy branch never pays for the [B, vocab] Gumbel draw
@@ -164,7 +195,7 @@ def make_ragged_serve_step(cfg: ArchConfig, run: RunConfig):
             params, tokens, cfg,
             positions=pos[:, None], cache=cache, cache_index=pos,
         )
-        next_tok = sample_tokens(logits[:, -1], key, temperature)
+        next_tok = sample_tokens(logits[:, -1], key, temperature, fold=pos)
         return jnp.where(active, next_tok, -1), new_cache
 
     return ragged_serve_step
@@ -199,10 +230,217 @@ def make_paged_ragged_serve_step(cfg: ArchConfig, run: RunConfig,
             page_table=page_table, page_size=page_size,
             paged_attn=paged_attn,
         )
-        next_tok = sample_tokens(logits[:, -1], key, temperature)
+        next_tok = sample_tokens(logits[:, -1], key, temperature, fold=pos)
         return jnp.where(active, next_tok, -1), new_cache
 
     return paged_ragged_serve_step
+
+
+# ---------------------------------------------------------------------------
+# self-speculative decoding: low-bit draft + multi-token paged verify
+# ---------------------------------------------------------------------------
+#
+# One compiled tick: the DRAFT model (the same weights SAMD-packed to a
+# lower bit width — the paper's ~6-10x-cheaper arithmetic is exactly the
+# cost profile a speculative draft wants) proposes K tokens per slot with
+# K unrolled single-token steps, then the full-precision TARGET model
+# verifies all K in ONE multi-token forward and per-slot accept lengths
+# come back to the host. Greedy verification is token-identical to plain
+# decode; temperature > 0 uses standard rejection sampling (accept d with
+# prob min(1, p_t(d)/p_d(d)), resample the first reject from the residual
+# (p_t - p_d)+), so the output distribution is the target's.
+#
+# Draft KV never touches the page pool: each draft step writes its K/V
+# into a K-slot bf16 ring that lives only inside the tick, and reads the
+# pool STRICTLY BELOW the tick's window base (the pool may hold a
+# previous tick's rejected-draft KV at >= the base). The verify forward
+# paged-writes all K+1 tokens in bulk through the page table; positions
+# past a slot's ``spec_len`` budget are masked to -1 (no write, no valid
+# logits), so partially-budgeted slots stay correct.
+
+# distinct per-purpose streams derived from the tick key, so no two
+# draws inside one compiled tick share Gumbel/uniform noise
+_SPEC_ACCEPT_STREAM = 0x5A
+_SPEC_RESAMPLE_STREAM = 0x5B
+
+
+def speculative_accept(logits: jax.Array, draft_tok: jax.Array,
+                       draft_logits: jax.Array, spec_len: jax.Array,
+                       key: jax.Array, temperature: jax.Array,
+                       pos: jax.Array):
+    """Per-slot accept lengths + output tokens for one speculative tick.
+
+    logits [B, K+1, V] target logits at window positions ``pos..pos+K``
+    (index j > spec_len[b] is garbage — masked by the budget);
+    draft_tok [B, K] proposed tokens; draft_logits [B, K, V]; spec_len
+    [B] per-slot draft budget (0..K); pos [B] window base positions.
+
+    Returns (out [B, K+1] int32, n_acc [B] int32): the tick emits
+    ``out[b, : n_acc[b] + 1]``. Greedy: out is the target argmax at every
+    position, and n_acc counts the drafts that matched it — emitted
+    tokens are exactly what non-speculative greedy decode would produce.
+    Sampled: accepted drafts followed by the rejection-resample (or the
+    bonus sample when every budgeted draft was accepted).
+    """
+    b, k1, v = logits.shape
+    k = k1 - 1
+    lf = logits.astype(jnp.float32)
+    j_idx = jnp.arange(1, k + 1, dtype=jnp.int32)[None, :]
+    in_budget = j_idx <= spec_len[:, None]
+
+    def greedy(_):
+        tgt = jnp.argmax(lf, axis=-1).astype(jnp.int32)
+        match = (draft_tok == tgt[:, :k]) & in_budget
+        n_acc = jnp.sum(jnp.cumprod(match.astype(jnp.int32), axis=1), axis=1)
+        return tgt, n_acc.astype(jnp.int32)
+
+    def sampled(kk):
+        t = jnp.maximum(temperature, 1e-6)
+        pt = jax.nn.softmax(lf[:, :k] / t, axis=-1)
+        pd = jax.nn.softmax(draft_logits.astype(jnp.float32) / t, axis=-1)
+        pt_d = jnp.take_along_axis(pt, draft_tok[..., None], axis=-1)[..., 0]
+        pd_d = jnp.take_along_axis(pd, draft_tok[..., None], axis=-1)[..., 0]
+        ratio = pt_d / jnp.maximum(pd_d, 1e-30)
+        ukeys = _fold_row_keys(jax.random.fold_in(kk, _SPEC_ACCEPT_STREAM),
+                               pos)
+        u = jax.vmap(lambda kr: jax.random.uniform(kr, (k,), jnp.float32))(
+            ukeys
+        )
+        ok = (u <= jnp.minimum(ratio, 1.0)) & in_budget
+        n_acc = jnp.sum(jnp.cumprod(ok.astype(jnp.int32), axis=1), axis=1)
+        n_acc = n_acc.astype(jnp.int32)
+        # replacement token at emit index n_acc: residual resample at the
+        # first reject, the target's own (bonus) sample when every
+        # budgeted draft was accepted
+        j_rep = jnp.clip(n_acc, 0, k - 1)[:, None, None]
+        pt_rep = jnp.take_along_axis(pt, j_rep, axis=1)[:, 0]
+        pd_rep = jnp.take_along_axis(pd, j_rep, axis=1)[:, 0]
+        resid = jnp.maximum(pt_rep - pd_rep, 0.0)
+        resid = jnp.where(
+            jnp.sum(resid, axis=-1, keepdims=True) > 0, resid, pt_rep
+        )
+        lg_bonus = jnp.take_along_axis(
+            lf, n_acc[:, None, None], axis=1
+        )[:, 0]
+        rkeys = _fold_row_keys(
+            jax.random.fold_in(kk, _SPEC_RESAMPLE_STREAM), pos + n_acc
+        )
+        g = jax.vmap(lambda kr: jax.random.gumbel(kr, (v,), jnp.float32))(
+            rkeys
+        )
+        resample = jnp.argmax(jnp.log(jnp.maximum(resid, 1e-30)) + g, axis=-1)
+        bonus = jnp.argmax(lg_bonus / t + g, axis=-1)
+        repl = jnp.where(n_acc >= spec_len, bonus, resample).astype(jnp.int32)
+        j_grid = jnp.arange(k + 1, dtype=jnp.int32)[None, :]
+        drafts_pad = jnp.concatenate([draft_tok, draft_tok[:, -1:]], axis=1)
+        out = jnp.where(j_grid < n_acc[:, None], drafts_pad, repl[:, None])
+        return out.astype(jnp.int32), n_acc
+
+    return jax.lax.cond(temperature > 0, sampled, greedy, key)
+
+
+def make_draft_step(cfg: ArchConfig, run: RunConfig, page_size: int,
+                    k_spec: int, paged_attn: str = "fused"):
+    """Draft half of the speculative tick: ``k_spec`` unrolled low-bit
+    autoregressive steps per slot. Each step's K/V lands in a tick-local
+    bf16 ring (``init_cache(cfg, B, k_spec)`` built in-trace — never the
+    pool), while pool history is read read-only STRICTLY BELOW the
+    window base. Returns (draft_tok [B, K], draft_logits [B, K, V])."""
+    max_len = run.shape.seq_len
+    assert k_spec >= 1, k_spec
+
+    def draft_step(draft_params, tokens, cache, positions, page_table,
+                   key, temperature):
+        b = tokens.shape[0]
+        pos = jnp.clip(positions.astype(jnp.int32), 0, max_len - 1)
+        pool_bound = pos - 1  # pool history strictly below the window
+        ring = init_cache(cfg, b, k_spec)
+        cur = tokens
+        drafts, dlogits = [], []
+        for j in range(k_spec):
+            lg, ring, _ = forward(
+                draft_params, cur, cfg,
+                positions=(pos + j)[:, None], cache=ring, cache_index=j,
+                page_table=page_table, page_size=page_size,
+                paged_attn=paged_attn,
+                pool_cache=cache, pool_bound=pool_bound,
+            )
+            lgj = lg[:, -1]
+            d = sample_tokens(lgj, jax.random.fold_in(key, j + 1),
+                              temperature, fold=pos + j)
+            drafts.append(d)
+            dlogits.append(lgj)
+            cur = d[:, None]
+        return jnp.stack(drafts, axis=1), jnp.stack(dlogits, axis=1)
+
+    return draft_step
+
+
+def make_speculative_verify_step(cfg: ArchConfig, run: RunConfig,
+                                 page_size: int, k_spec: int,
+                                 paged_attn: str = "fused"):
+    """Verify half: ONE multi-token target forward over ``[t0, d_1..d_K]``
+    at positions ``pos..pos+K`` — all K+1 KV entries paged-written in
+    bulk, attention through the multi-token-query paged block — followed
+    by the accept rule. Returns (out [B, K+1], n_acc [B], new_cache)."""
+    max_len = run.shape.seq_len
+
+    def verify_step(params, tokens, draft_tok, draft_lg, cache, positions,
+                    active, page_table, spec_len, key, temperature):
+        pos = jnp.clip(positions.astype(jnp.int32), 0, max_len - 1)
+        seq = jnp.concatenate([tokens, draft_tok], axis=1)  # [B, K+1]
+        steps_i = jnp.arange(k_spec + 1, dtype=jnp.int32)[None, :]
+        qpos = jnp.where(steps_i <= spec_len[:, None],
+                         pos[:, None] + steps_i, -1)
+        logits, new_cache, _ = forward(
+            params, seq, cfg, positions=qpos, cache=cache,
+            page_table=page_table, page_size=page_size,
+            paged_attn=paged_attn,
+        )
+        out, n_acc = speculative_accept(
+            logits, draft_tok, draft_lg, spec_len, key, temperature, pos
+        )
+        out = jnp.where(active[:, None], out, -1)
+        n_acc = jnp.where(active, n_acc, 0)
+        return out, n_acc, new_cache
+
+    return verify_step
+
+
+def make_speculative_step(cfg: ArchConfig, run: RunConfig, page_size: int,
+                          k_spec: int, paged_attn: str = "fused"):
+    """One compiled speculative tick: draft + verify fused in a single
+    trace (the serving hot path — one host sync per tick for up to K+1
+    tokens per slot).
+
+    ``spec_len`` [B] caps each slot's draft budget (0..k_spec): positions
+    past it carry -1 (nothing written, logits ignored), so slots near
+    their token budget, the cache end, or an unallocated page degrade
+    gracefully down to plain one-token decode. Only the accepted prefix
+    is ever consumed by the host; KV written past it is overwritten by
+    the next tick's window before any query can attend to it (the write
+    cursor resumes at the first unaccepted position).
+    """
+    assert paged_attn in ("fused", "gather"), paged_attn
+    draft = make_draft_step(cfg, run, page_size, k_spec, paged_attn)
+    verify = make_speculative_verify_step(cfg, run, page_size, k_spec,
+                                          paged_attn)
+
+    def speculative_step(params, draft_params, tokens, cache, positions,
+                         active, page_table, spec_len, key, temperature):
+        """tokens [B,1] int32 (each slot's pending last token); spec_len
+        [B] int32 per-slot draft budgets. Returns (out [B, k_spec+1],
+        n_acc [B], new_cache); rows of inactive slots are -1/0."""
+        draft_tok, draft_lg = draft(
+            draft_params, tokens, cache, positions, page_table, key,
+            temperature,
+        )
+        return verify(
+            params, tokens, draft_tok, draft_lg, cache, positions, active,
+            page_table, spec_len, key, temperature,
+        )
+
+    return speculative_step
 
 
 def make_paged_prefill_step(cfg: ArchConfig, run: RunConfig,
@@ -244,7 +482,8 @@ def make_paged_prefill_step(cfg: ArchConfig, run: RunConfig,
         last = jnp.take_along_axis(
             logits, jnp.clip(lens - 1, 0)[:, None, None], axis=1
         )[:, 0]
-        tok0 = sample_tokens(last, key, temperature)
+        tok0 = sample_tokens(last, key, temperature,
+                             fold=starts + jnp.clip(lens - 1, 0))
         return jnp.where(valid, tok0, -1), new_cache
 
     return paged_prefill_step
@@ -282,7 +521,8 @@ def make_batched_prefill_step(cfg: ArchConfig, run: RunConfig,
         last = jnp.take_along_axis(
             logits, jnp.clip(lens - 1, 0)[:, None, None], axis=1
         )[:, 0]
-        tok0 = sample_tokens(last, key, temperature)
+        tok0 = sample_tokens(last, key, temperature,
+                             fold=jnp.clip(lens - 1, 0))
 
         # slot b <- filled row r iff valid[r] and slot_map[r] == b
         match = valid[None, :] & (

@@ -279,6 +279,27 @@ def _paged_key_positions(page_table: jax.Array, page_size: int) -> jax.Array:
     return jnp.where(valid, iota, -1)
 
 
+def _gathered_pool_kv(pool: dict, page_table: jax.Array, page_size: int,
+                      dtype) -> tuple:
+    """Dense per-row gather of a KV pool into contiguous
+    [B, n_pp * page_size, Hkv, dh] K/V views. SAMD-packed uint32 pools
+    are lane-unpacked and rescaled after the gather — the ONE reference
+    view shared by the gather decode path and the speculative draft's
+    pool read, so the packed-page layout is interpreted in one place."""
+    if pool["k"].dtype in (jnp.int8, jnp.uint32):
+        kg = _paged_gather(pool["k"], page_table, page_size)
+        vg = _paged_gather(pool["v"], page_table, page_size)
+        ksg = _paged_gather(pool["k_scale"], page_table, page_size)
+        vsg = _paged_gather(pool["v_scale"], page_table, page_size)
+        k_full = (unpack_int8_lanes(kg).astype(jnp.float32)
+                  * ksg[..., None]).astype(dtype)
+        v_full = (unpack_int8_lanes(vg).astype(jnp.float32)
+                  * vsg[..., None]).astype(dtype)
+        return k_full, v_full
+    return (_paged_gather(pool["k"], page_table, page_size).astype(dtype),
+            _paged_gather(pool["v"], page_table, page_size).astype(dtype))
+
+
 def attention_block(
     p: dict,
     x: jax.Array,            # [B, S, D]
@@ -290,6 +311,8 @@ def attention_block(
     page_table=None,         # [B, n_pp] int32: paged KV (pool-shaped cache)
     page_size: int = 0,
     paged_attn: str = "gather",  # "fused" (Pallas kernel) | "gather" (ref)
+    pool_kv=None,            # read-only page pools (speculative draft path)
+    pool_bound=None,         # [B] last pool position the draft may read
     chunk: int = 1024,
 ):
     """Full attention sub-block: norm -> qkv -> rope -> attend -> out.
@@ -311,9 +334,18 @@ def attention_block(
     straight off the pool — no gathered [B, n_pp * page_size] copy;
     ``paged_attn="gather"`` keeps the per-row page gather as the
     reference path (and serves prefill, whose queries span many
-    positions). Quantized pools (``kv_bits=8``) are stored SAMD-packed:
+    positions); multi-token decode blocks (``paged_attn="fused"``,
+    S > 1 — the speculative verify) run the multi-token-query sibling
+    kernel. Quantized pools (``kv_bits=8``) are stored SAMD-packed:
     uint32 words of four int8 lanes along head_dim, unpacked lane-wise
     inside the kernel (fused) or after the gather (reference).
+
+    ``pool_kv`` switches to the speculative DRAFT layout: ``kv_cache``
+    is then a tick-local bf16 ring that is written here (the draft's
+    in-flight proposals), while the paged pool in ``pool_kv`` is READ
+    ONLY, truncated to positions <= ``pool_bound`` — the pool may hold a
+    previous tick's rejected-draft KV above the window base, which must
+    never reach the draft's attention.
     """
     b, s, d = x.shape
     h, hkv, dh = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
@@ -336,7 +368,36 @@ def attention_block(
     k = apply_rope(k, sin, cos)
 
     new_cache = None
-    if kv_cache is not None:
+    if pool_kv is not None:
+        # speculative DRAFT path: write this token's K/V into the tick-
+        # local bf16 ring, attend over (pool pages <= pool_bound) + ring.
+        ck = _cache_write(kv_cache["k"], k, cache_index, s)
+        cv = _cache_write(kv_cache["v"], v, cache_index, s)
+        cpos = _cache_write(
+            kv_cache["pos"], positions.astype(jnp.int32), cache_index, s)
+        new_cache = {"k": ck, "v": cv, "pos": cpos}
+        if paged_attn == "fused" and s == 1:
+            # pool page loop + one ring fold, single online softmax (the
+            # jnp lowering — plain XLA on every backend, see kernels.ops)
+            att = kernel_ops.paged_decode_attention(
+                q[:, 0], pool_kv["k"], pool_kv["v"], page_table,
+                pool_bound,
+                k_scale=pool_kv.get("k_scale"),
+                v_scale=pool_kv.get("v_scale"),
+                extra_k=ck, extra_v=cv, extra_pos=cpos,
+            )[:, None]
+        else:
+            k_pos_pool = _paged_key_positions(page_table, page_size)
+            k_pos_pool = jnp.where(
+                k_pos_pool <= pool_bound[:, None], k_pos_pool, -1)
+            pool_k, pool_v = _gathered_pool_kv(pool_kv, page_table,
+                                               page_size, q.dtype)
+            k_full = jnp.concatenate([pool_k, ck.astype(q.dtype)], axis=1)
+            v_full = jnp.concatenate([pool_v, cv.astype(q.dtype)], axis=1)
+            k_pos = jnp.concatenate([k_pos_pool, cpos], axis=1)
+            att = attention(q, k_full, v_full, positions, k_pos,
+                            chunk=chunk)
+    elif kv_cache is not None:
         # int8 ring rows, or SAMD-packed uint32 page pools (kv_bits=8)
         quantized_kv = kv_cache["k"].dtype in (jnp.int8, jnp.uint32)
 
@@ -383,24 +444,20 @@ def attention_block(
                     k_scale=new_cache.get("k_scale"),
                     v_scale=new_cache.get("v_scale"),
                 )[:, None]
+            elif paged_attn == "fused":
+                # speculative verify: a q-block of S tokens per slot
+                # attends causally over the pool through the multi-
+                # token-query kernel (per-query positions; -1 = masked)
+                att = kernel_ops.paged_verify_attention(
+                    q, new_cache["k"], new_cache["v"], page_table,
+                    positions,
+                    k_scale=new_cache.get("k_scale"),
+                    v_scale=new_cache.get("v_scale"),
+                )
             else:
                 k_pos = _paged_key_positions(page_table, page_size)
-                if quantized_kv:
-                    kg = _paged_gather(new_cache["k"], page_table, page_size)
-                    vg = _paged_gather(new_cache["v"], page_table, page_size)
-                    ksg = _paged_gather(new_cache["k_scale"], page_table,
-                                        page_size)
-                    vsg = _paged_gather(new_cache["v_scale"], page_table,
-                                        page_size)
-                    k_full = (unpack_int8_lanes(kg).astype(jnp.float32)
-                              * ksg[..., None]).astype(q.dtype)
-                    v_full = (unpack_int8_lanes(vg).astype(jnp.float32)
-                              * vsg[..., None]).astype(q.dtype)
-                else:
-                    k_full = _paged_gather(
-                        new_cache["k"], page_table, page_size).astype(q.dtype)
-                    v_full = _paged_gather(
-                        new_cache["v"], page_table, page_size).astype(q.dtype)
+                k_full, v_full = _gathered_pool_kv(new_cache, page_table,
+                                                   page_size, q.dtype)
                 att = attention(q, k_full, v_full, positions, k_pos,
                                 chunk=chunk)
         elif quantized_kv:

@@ -483,6 +483,8 @@ def forward(
     page_table: Optional[jax.Array] = None,
     page_size: int = 0,
     paged_attn: str = "gather",
+    pool_cache: Optional[dict] = None,
+    pool_bound: Optional[jax.Array] = None,
     prefix_embeds: Optional[jax.Array] = None,
     remat: bool = False,
 ):
@@ -492,8 +494,16 @@ def forward(
     pool layout (``init_paged_cache``); ``cache_index`` is then unused —
     every token's cache slot is derived from its logical position.
     ``paged_attn="fused"`` runs single-token decode attention through the
-    Pallas paged-attention kernel (no gathered KV copy); ``"gather"``
-    keeps the dense per-row page gather as the reference path.
+    Pallas paged-attention kernel (no gathered KV copy) and multi-token
+    decode blocks (the speculative verify) through its multi-token-query
+    sibling; ``"gather"`` keeps the dense per-row page gather as the
+    reference path.
+
+    ``pool_cache`` switches to the speculative DRAFT layout: ``cache``
+    is then a tick-local KV ring written at ``cache_index`` while the
+    paged pools in ``pool_cache`` are read-only, truncated to positions
+    <= ``pool_bound`` [B] (unrolled layer layout only — the draft runs
+    at decode time, which never uses the scan path).
     """
     b, s = tokens.shape
     # gather THEN cast: the backward scatter-add into the embedding table
@@ -514,6 +524,9 @@ def forward(
             "scan-over-layers needs no cache (train) or a stacked cache "
             "(prefill); decode uses the unrolled list layout"
         )
+        assert pool_cache is None, (
+            "the speculative draft path needs the unrolled layer layout"
+        )
         x, aux_total, new_stacked = _scan_blocks(
             params, x, positions, cfg, remat, cache, cache_index,
             page_table, page_size, paged_attn,
@@ -530,23 +543,25 @@ def forward(
         )
         return logits, new_cache, aux_total
 
-    def dense_block(p, x, kv_c):
+    def dense_block(p, x, kv_c, pool_c):
         delta, new_kv = L.attention_block(
             p["attn"], x, positions, cfg,
             kv_cache=kv_c, cache_index=cache_index,
             page_table=page_table, page_size=page_size,
-            paged_attn=paged_attn, chunk=cfg.attn_chunk,
+            paged_attn=paged_attn, pool_kv=pool_c, pool_bound=pool_bound,
+            chunk=cfg.attn_chunk,
         )
         x = x + delta
         x = x + L.mlp_block(p["mlp"], x, cfg)
         return x, new_kv
 
-    def moe_layer(p, x, kv_c):
+    def moe_layer(p, x, kv_c, pool_c):
         delta, new_kv = L.attention_block(
             p["attn"], x, positions, cfg,
             kv_cache=kv_c, cache_index=cache_index,
             page_table=page_table, page_size=page_size,
-            paged_attn=paged_attn, chunk=cfg.attn_chunk,
+            paged_attn=paged_attn, pool_kv=pool_c, pool_bound=pool_bound,
+            chunk=cfg.attn_chunk,
         )
         x = x + delta
         mo, aux = L.moe_block(p["moe"], x, cfg,
@@ -555,13 +570,16 @@ def forward(
 
     for i, p in enumerate(params["blocks"]):
         layer_cache = cache["layers"][i] if cache is not None else None
+        pool_layer = (
+            pool_cache["layers"][i] if pool_cache is not None else None
+        )
         if cfg.family == "dense":
             fn = jax.checkpoint(dense_block) if remat else dense_block
-            x, new_kv = fn(p, x, layer_cache)
+            x, new_kv = fn(p, x, layer_cache, pool_layer)
             new_layers.append(new_kv)
         elif cfg.family == "moe":
             fn = jax.checkpoint(moe_layer) if remat else moe_layer
-            x, new_kv, aux = fn(p, x, layer_cache)
+            x, new_kv, aux = fn(p, x, layer_cache, pool_layer)
             aux_total = aux_total + aux
             new_layers.append(new_kv)
         elif cfg.family == "rwkv6":

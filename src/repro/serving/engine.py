@@ -87,6 +87,30 @@ families under ragged decode):
     shared pages), so a new occupant can never attend to a previous
     occupant's KV (see layers._paged_key_positions).
 
+Self-speculative decoding (``speculative=K`` > 0, paged + ragged only):
+each tick runs ONE compiled draft+verify step instead of the plain
+decode step. The draft is the SAME model with SAMD-packed low-bit
+weights (``draft_quant``, default 4-bit — the paper's cheap-arithmetic
+regime applied where it pays most: K extra forwards per tick); it
+proposes up to K tokens per slot (tick-local ring KV, pool read-only
+below the window), and the full-precision target verifies all of them
+in one multi-token forward with per-slot accept lengths — between 1 and
+K+1 tokens per slot cross the device boundary per tick. Greedy
+verification is token-identical to plain decode; temperature > 0 uses
+rejection sampling, so the output distribution stays the target's.
+``speculative=0`` (default) keeps the single-token path byte-identical.
+Page grants cover the verify window (``_spec_lens``); KV written past a
+slot's accepted run is overwritten by the next tick's window before any
+query can reach it.
+
+Cached-prefix retention (``prefix_retain=N`` > 0): up to N refcount-0
+prefix pages park in the allocator's LRU retention pool on release
+instead of freeing, so prefix sharing survives NON-overlapping
+residencies (request B reuses request A's pages after A fully retired).
+Retained pages are evicted LRU-first whenever the free list runs short
+— retention never causes preemption, admission failure, or footprint
+growth in ``peak_pages_used`` (which counts refcount > 0 holders only).
+
 ``kv_mode="ring"`` keeps the PR 1 fixed per-slot KV ring (also the
 automatic fallback for recurrent families and ``decode_mode="per_row"``);
 ``decode_mode="per_row"`` keeps the old per-row reference path (slow, one
@@ -142,7 +166,7 @@ class Request:
 class PageAllocator:
     """Host-side refcounted free list over the global KV page pool.
 
-    O(1) alloc/free. Three kinds of bookkeeping:
+    O(1) alloc/free. Four kinds of bookkeeping:
 
     * ALLOCATION: ``alloc`` grants pages at refcount 1; ``release`` drops
       one ref per page and returns a page to the free list only when its
@@ -157,29 +181,57 @@ class PageAllocator:
       in the free list (they hold no data) yet are invisible to further
       admissions, so a reservation-admitted request can always claim its
       next page mid-decode.
+    * RETENTION (``retain_limit`` > 0): up to ``retain_limit`` refcount-0
+      pages released with ``retain=True`` park in an LRU pool instead of
+      the free list, keeping their KV (and the owner's content-index
+      entry) alive for prefix hits across NON-OVERLAPPING residencies.
+      Retained pages count as ``available`` — any grant that outgrows the
+      free list evicts LRU retained pages first (``on_evict`` tells the
+      owner to drop its index entries), so retention can never cause a
+      preemption or an admission failure. ``revive`` re-references a
+      retained page on a prefix hit.
     """
 
-    def __init__(self, num_pages: int):
+    def __init__(self, num_pages: int, retain_limit: int = 0):
         self.num_pages = num_pages
+        self.retain_limit = int(retain_limit)
         self._free = list(range(num_pages - 1, -1, -1))
+        self._retained: collections.OrderedDict = collections.OrderedDict()
         self.refcount = np.zeros(num_pages, np.int32)
         self.reserved = 0
+        self.on_evict = None  # callable(list[int]) -> None, or None
 
     @property
     def free_pages(self) -> int:
         return len(self._free)
 
     @property
+    def retained_pages(self) -> int:
+        return len(self._retained)
+
+    @property
     def held_pages(self) -> int:
-        """Pages with at least one holder (unique-page footprint)."""
+        """Pages with at least one holder (unique-page footprint).
+        Retained pages are refcount-0 — parked, not held."""
         return int((self.refcount > 0).sum())
 
     @property
     def available(self) -> int:
-        """Pages an admission may take or reserve right now."""
-        return len(self._free) - self.reserved
+        """Pages an admission may take or reserve right now (retained
+        pages are reclaimable, so they count)."""
+        return len(self._free) + len(self._retained) - self.reserved
+
+    def _evict(self, n: int) -> None:
+        """Move the ``n`` least-recently-retained pages to the free list
+        (the owner's index entries are dropped via ``on_evict``)."""
+        pages = [self._retained.popitem(last=False)[0] for _ in range(n)]
+        self._free.extend(pages)
+        if self.on_evict is not None:
+            self.on_evict(pages)
 
     def _grant(self, n: int) -> list:
+        if len(self._free) < n:
+            self._evict(n - len(self._free))
         pages = [self._free.pop() for _ in range(n)]
         for p in pages:
             assert self.refcount[p] == 0, ("double grant", p)
@@ -197,7 +249,8 @@ class PageAllocator:
     def claim_reserved(self, n: int = 1) -> list:
         """Convert previously reserved pages into real ones (never fails:
         the reservation guarantees them)."""
-        assert 0 <= n <= self.reserved <= len(self._free)
+        assert 0 <= n <= self.reserved \
+            <= len(self._free) + len(self._retained)
         self.reserved -= n
         return self._grant(n)
 
@@ -210,21 +263,40 @@ class PageAllocator:
         assert self.refcount[page] >= 1, ("share of unheld page", page)
         self.refcount[page] += 1
 
-    def release(self, pages) -> list:
+    def is_retained(self, page: int) -> bool:
+        return page in self._retained
+
+    def revive(self, page: int) -> None:
+        """Re-reference a retained refcount-0 page (prefix hit after its
+        last holder left — the cross-residency sharing win)."""
+        del self._retained[page]
+        assert self.refcount[page] == 0, ("revive of held page", page)
+        self.refcount[page] = 1
+
+    def release(self, pages, retain: bool = False) -> list:
         """Drop one reference per page; pages whose refcount reaches zero
-        return to the free list. Returns the actually-freed pages."""
+        return to the free list — or, with ``retain=True`` and retention
+        configured, park in the LRU retention pool (evicting its oldest
+        entry when full). Returns the actually-FREED pages (the owner
+        must drop their index entries); retained pages are not freed."""
         freed = []
         for p in pages:
             p = int(p)
             assert self.refcount[p] >= 1, ("release of unheld page", p)
             self.refcount[p] -= 1
             if self.refcount[p] == 0:
-                self._free.append(p)
-                freed.append(p)
+                if retain and self.retain_limit > 0:
+                    if len(self._retained) >= self.retain_limit:
+                        self._evict(1)
+                    self._retained[p] = None
+                else:
+                    self._free.append(p)
+                    freed.append(p)
         return freed
 
     def reset(self) -> None:
         self._free = list(range(self.num_pages - 1, -1, -1))
+        self._retained.clear()
         self.refcount[:] = 0
         self.reserved = 0
 
@@ -250,10 +322,14 @@ class ServingEngine:
                  num_pages: Optional[int] = None,
                  admission: str = "reserve",
                  paged_attn: str = "fused",
-                 prefix_sharing: bool = True):
+                 prefix_sharing: bool = True,
+                 prefix_retain: Optional[int] = None,
+                 speculative: int = 0,
+                 draft_quant: QuantConfig | None = None):
         assert decode_mode in ("ragged", "per_row"), decode_mode
         assert admission in ("reserve", "optimistic"), admission
         assert paged_attn in ("fused", "gather"), paged_attn
+        assert speculative >= 0, speculative
         # paged KV needs the batched admission path and pool-shaped cache
         # inside the fused steps; the per-row reference path slices per-slot
         # cache rows and recurrent families have O(1) state — both fall
@@ -278,6 +354,13 @@ class ServingEngine:
         self.admission = admission
         self.paged_attn = paged_attn
         self.prefix_sharing = bool(prefix_sharing) and kv_mode == "paged"
+        self.speculative = int(speculative)
+        if self.speculative and (kv_mode != "paged"
+                                 or decode_mode != "ragged"):
+            raise ValueError(
+                "speculative decoding needs kv_mode='paged' and "
+                f"decode_mode='ragged', got {kv_mode}/{decode_mode}"
+            )
         self.page_size = page_size
         self.pages_per_slot = -(-max_len // page_size)
         if num_pages is None:
@@ -289,11 +372,29 @@ class ServingEngine:
         template = build_template(cfg)
         if params is None:
             params = init_from_spec(template, jax.random.PRNGKey(seed))
+        raw_params = params
         if quant is not None and quant.enabled:
             params = quantize_params(params, template, quant)
         self.params = params
         self.quant = quant or QuantConfig(enabled=False)
         self._kv_bits = self.quant.kv_bits if self.quant.enabled else None
+        if self.speculative:
+            # self-speculative draft: the SAME weights, SAMD-packed to a
+            # low bit width (default 4-bit — the paper's cheap-arithmetic
+            # regime). An already-quantized target is its own draft; an
+            # explicitly disabled draft_quant shares the bf16 target
+            # weights (the accept-rate-1 oracle used by tests).
+            if self.quant.enabled:
+                self.draft_quant = self.quant
+                self._draft_params = self.params
+            else:
+                dq = draft_quant if draft_quant is not None \
+                    else QuantConfig(bits=4)
+                self.draft_quant = dq
+                self._draft_params = (
+                    quantize_params(raw_params, template, dq)
+                    if dq.enabled else self.params
+                )
         run = RunConfig(arch=cfg,
                         shape=ShapeConfig("serve", max_len, max_batch,
                                           "decode"),
@@ -304,6 +405,13 @@ class ServingEngine:
                     cfg, run, page_size, paged_attn=paged_attn),
                 donate_argnums=(2,),
             )
+            if self.speculative:
+                self._spec_step = jax.jit(
+                    steps_mod.make_speculative_step(
+                        cfg, run, page_size, self.speculative,
+                        paged_attn=paged_attn),
+                    donate_argnums=(3,),
+                )
             # COW fork primitive: one fused device op copies a pool page
             # across every layer (src/dst are traced, so one compile
             # serves every fork)
@@ -336,7 +444,15 @@ class ServingEngine:
         self.slot_next = np.zeros(max_batch, np.int32)
         self.active = np.zeros(max_batch, bool)
         self.finished: list[Request] = []
-        self._allocator = PageAllocator(num_pages)
+        # bounded LRU retention of refcount-0 prefix pages (0 = off):
+        # sharing then survives non-overlapping residencies
+        self.prefix_retain = (
+            int(prefix_retain) if prefix_retain and self.prefix_sharing
+            else 0
+        )
+        self._allocator = PageAllocator(num_pages,
+                                        retain_limit=self.prefix_retain)
+        self._allocator.on_evict = self._deregister
         self.page_table = np.full((max_batch, self.pages_per_slot), -1,
                                   np.int32)
         self.slot_pages = np.zeros(max_batch, np.int32)     # allocated count
@@ -360,7 +476,11 @@ class ServingEngine:
             "page_grants": 0,           # incremental mid-decode page allocs
             "prefix_hits": 0,           # pages mapped shared at admission
             "prefix_tokens_saved": 0,   # prompt tokens prefill skipped
+            "retained_hits": 0,         # refcount-0 retained pages revived
             "cow_forks": 0,             # copy-on-write page copies
+            "spec_ticks": 0,            # speculative draft+verify ticks
+            "draft_proposed": 0,        # draft tokens offered to verify
+            "draft_accepted": 0,        # draft tokens accepted by verify
             "preemptions": 0,           # slots preempted for recompute
             "oop_retired": 0,           # slots truncated on pool exhaustion
             "rejected": 0,              # requests refused before prefill
@@ -526,14 +646,28 @@ class ServingEngine:
                 f"pool holds {self.num_pages}",
             )
             return "reject", 0
+        # take the shared refs BEFORE the alloc: the alloc may evict
+        # refcount-0 RETAINED pages to satisfy itself, and an evicted
+        # page must never be one we are about to map as a prefix hit
+        retained_hits = 0
+        for b, pg in enumerate(shared):
+            if self._allocator.is_retained(pg):
+                self._allocator.revive(pg)
+                retained_hits += 1
+            else:
+                self._allocator.share(pg)
+            self.page_table[slot, b] = pg
         pages = self._allocator.alloc(blocks - m, reserve=reserve)
         if pages is None:
             # pool pressure: wait at the queue head until a retirement
-            # frees pages
+            # frees pages (undo the speculative shared refs; revived
+            # retained pages re-park, still indexed)
+            if shared:
+                self._deregister(self._allocator.release(
+                    shared, retain=self.prefix_retain > 0))
+                self.page_table[slot, :m] = -1
             return "wait", 0
-        for b, pg in enumerate(shared):
-            self._allocator.share(pg)
-            self.page_table[slot, b] = pg
+        self.stats["retained_hits"] += retained_hits
         nxt = m
         if fork_src is not None:
             # COW fork: the prefill write at position t-1 (and decode
@@ -704,7 +838,8 @@ class ServingEngine:
         )
         self.stats["per_row_prefill_calls"] += 1
         tok0 = int(steps_mod.sample_tokens(
-            logits[:, -1], self._next_key(), jnp.float32(self.temperature)
+            logits[:, -1], self._next_key(), jnp.float32(self.temperature),
+            fold=jnp.asarray([t - 1], jnp.int32),
         )[0])
         self._finish_admit(slot, req, eff, tok0)
 
@@ -740,7 +875,7 @@ class ServingEngine:
 
     # -- paged allocation --------------------------------------------------
     def _note_peak(self):
-        used = self.num_pages - self._allocator.free_pages
+        used = self._allocator.held_pages
         if used > self.stats["peak_pages_used"]:
             self.stats["peak_pages_used"] = used
 
@@ -748,12 +883,23 @@ class ServingEngine:
         """Drop every page reference a slot holds (and cancel its unused
         growth reservation); pages whose last reference this was return
         to the free list and leave the prefix index — the retire and
-        preempt path."""
+        preempt path. With retention configured, last-reference INDEXED
+        pages park in the allocator's LRU retention pool instead (their
+        index entries and device KV stay valid for later prefix hits);
+        unindexed pages (partial tails, COW forks) free as before."""
         if self.kv_mode != "paged":
             return
         held = self.page_table[slot][self.page_table[slot] >= 0]
         if held.size:
-            self._deregister(self._allocator.release(held))
+            if self.prefix_retain > 0:
+                indexed = [int(p) for p in held if int(p) in self._page_key]
+                rest = [int(p) for p in held
+                        if int(p) not in self._page_key]
+                freed = self._allocator.release(indexed, retain=True)
+                freed += self._allocator.release(rest)
+            else:
+                freed = self._allocator.release(held)
+            self._deregister(freed)
         if self.slot_reserved[slot]:
             self._allocator.cancel_reservation(int(self.slot_reserved[slot]))
         self.page_table[slot] = -1
@@ -806,6 +952,27 @@ class ServingEngine:
             if victim == i:
                 return None
 
+    def _claim_reserved_page(self, i: int) -> Optional[int]:
+        """Claim one page from slot ``i``'s growth reservation, or None
+        if it has none left. Never fails when it returns a page — the
+        admission horizon guarantees the reservation covers every write
+        the request can make (speculative lookahead included)."""
+        if self.slot_reserved[i] <= 0:
+            return None
+        page = self._allocator.claim_reserved(1)[0]
+        self.slot_reserved[i] -= 1
+        return page
+
+    def _bind_next_page(self, i: int, page: int) -> None:
+        """Append ``page`` as slot ``i``'s next block — the ONE place the
+        grant bookkeeping (table entry, allocated count, stat) lives, so
+        plain-decode grants and speculative lookahead grants can never
+        desynchronize."""
+        blk = int(self.slot_pages[i])
+        self.page_table[i, blk] = page
+        self.slot_pages[i] = blk + 1
+        self.stats["page_grants"] += 1
+
     def _grant_pages(self):
         """Before the tick's write at ``slot_pos[i]``, make sure the page
         covering it exists AND is exclusively held. Reservation-admitted
@@ -830,17 +997,46 @@ class ServingEngine:
                 assert self._allocator.refcount[page] == 1, (
                     "write cursor reached a shared page", i, block, page)
                 continue
-            if self.slot_reserved[i] > 0:
-                page = self._allocator.claim_reserved(1)[0]
-                self.slot_reserved[i] -= 1
-            else:
+            page = self._claim_reserved_page(int(i))
+            if page is None:
                 page = self._alloc_or_preempt(int(i))
                 if page is None:
                     continue
-            self.page_table[i, block] = page
-            self.slot_pages[i] = block + 1
-            self.stats["page_grants"] += 1
+            self._bind_next_page(int(i), page)
         self._note_peak()
+
+    def _spec_lens(self) -> np.ndarray:
+        """Per-slot draft budgets for this tick, with lookahead page
+        grants: slot ``i`` may draft ``spec_len[i]`` tokens, so the
+        verify writes positions ``pos..pos + spec_len[i]`` — every page
+        covering that span must exist before the step runs. The budget
+        is capped by the engine K, the request's remaining tokens (the
+        reservation horizon already covers exactly that span), the cache
+        end, and — under optimistic admission — by what the pool can
+        grant WITHOUT preempting: lookahead is an optimization and must
+        never evict a resident request to happen."""
+        ps = self.page_size
+        spec = np.zeros(self.max_batch, np.int32)
+        for i in np.nonzero(self.active)[0]:
+            req = self.slots[i]
+            pos = int(self.slot_pos[i])
+            want = min(self.speculative,
+                       req.max_tokens - len(req.generated) - 1,
+                       self.max_len - 1 - pos)
+            want = max(0, want)
+            last_block = (pos + want) // ps
+            while int(self.slot_pages[i]) <= last_block:
+                page = self._claim_reserved_page(int(i))
+                if page is None:
+                    got = self._allocator.alloc(1)  # lookahead: no preempt
+                    if got is None:
+                        break
+                    page = got[0]
+                self._bind_next_page(int(i), page)
+            cap = int(self.slot_pages[i]) * ps - 1 - pos
+            spec[i] = min(want, max(0, cap))
+        self._note_peak()
+        return spec
 
     def _pow2_width(self, pages: int) -> int:
         """Page-table width bucket covering ``pages``: next power of two,
@@ -863,8 +1059,38 @@ class ServingEngine:
         return self.page_table[:, :width]
 
     # -- decode ------------------------------------------------------------
+    def _advance_slot(self, i: int, tok: int) -> bool:
+        """Consume ONE generated token for slot ``i``: append, advance the
+        write cursor, index any page the cursor just completed (so a
+        follow-up request whose prompt extends this request's prompt +
+        generation shares it — the multi-turn continuation pattern), and
+        retire the slot when done or out of cache. Returns True if the
+        slot retired — a speculative tick stops consuming its accepted
+        run there. Bugfix kept from PR 2: forced retirement at cache
+        exhaustion sets ``truncated`` so it stays distinguishable from
+        natural completion."""
+        req = self.slots[i]
+        req.generated.append(tok)
+        self.slot_pos[i] += 1
+        self.slot_next[i] = tok
+        pos = int(self.slot_pos[i])
+        ps = self.page_size
+        if self.prefix_sharing and pos % ps == 0:
+            b = pos // ps - 1
+            page = int(self.page_table[i, b])
+            if page >= 0 and self._register_block(
+                    self._written_tokens(i), b, page):
+                self._prefix_ready.add(page)
+        if req.done or pos >= self.max_len:
+            if not req.done:
+                req.truncated = True
+            self._retire_slot(i, req)
+            return True
+        return False
+
     def step(self):
-        """One engine tick: admit, grant pages, ONE fused decode, retire."""
+        """One engine tick: admit, grant pages, ONE fused decode (or one
+        fused speculative draft+verify), retire."""
         self._admit()
         if not self.active.any():
             return False
@@ -872,6 +1098,8 @@ class ServingEngine:
             self._grant_pages()
             if not self.active.any():
                 return True  # progress: slots were preempted or retired
+        if self.decode_mode == "ragged" and self.speculative:
+            return self._step_speculative()
         if self.decode_mode == "ragged":
             args = [
                 self.params,
@@ -887,29 +1115,42 @@ class ServingEngine:
             next_ids = np.asarray(next_ids)  # the ONE host sync per tick
         else:
             next_ids = self._decode_rows_reference()
-        ps = self.page_size
         for i in np.nonzero(self.active)[0]:
-            req = self.slots[i]
-            req.generated.append(int(next_ids[i]))
-            self.slot_pos[i] += 1
-            self.slot_next[i] = int(next_ids[i])
-            pos = int(self.slot_pos[i])
-            if self.prefix_sharing and pos % ps == 0:
-                # a decode just completed a full page: index it, so a
-                # follow-up request whose prompt extends this request's
-                # (prompt + generation so far) shares instead of
-                # re-prefilling — the multi-turn continuation pattern
-                b = pos // ps - 1
-                page = int(self.page_table[i, b])
-                if page >= 0 and self._register_block(
-                        self._written_tokens(int(i)), b, page):
-                    self._prefix_ready.add(page)
-            if req.done or self.slot_pos[i] >= self.max_len:
-                if not req.done:
-                    # bugfix: forced retirement at cache exhaustion used to
-                    # be indistinguishable from natural completion
-                    req.truncated = True
-                self._retire_slot(int(i), req)
+            self._advance_slot(int(i), int(next_ids[i]))
+        return True
+
+    def _step_speculative(self) -> bool:
+        """One speculative tick: grant lookahead pages, run the fused
+        draft(K)+verify step, then consume each slot's accepted run plus
+        the verify's own token — between 1 and K+1 tokens per slot per
+        host sync. Greedy consumption is token-identical to plain decode
+        (the verify emits the target argmax at every position)."""
+        spec_len = self._spec_lens()
+        if not self.active.any():
+            return True
+        out, n_acc, self.cache = self._spec_step(
+            self.params, self._draft_params,
+            jnp.asarray(self.slot_next[:, None]), self.cache,
+            jnp.asarray(self.slot_pos), jnp.asarray(self.active),
+            jnp.asarray(self._active_table()), jnp.asarray(spec_len),
+            self._next_key(), jnp.float32(self.temperature),
+        )
+        self.stats["decode_steps"] += 1
+        self.stats["spec_ticks"] += 1
+        out = np.asarray(out)      # the ONE host sync per tick
+        n_acc = np.asarray(n_acc)
+        for i in np.nonzero(self.active)[0]:
+            self.stats["draft_proposed"] += int(spec_len[i])
+            used = 0
+            for m in range(int(n_acc[i]) + 1):
+                used = m + 1
+                if self._advance_slot(int(i), int(out[i, m])):
+                    break
+            # accept rate counts drafts that became OUTPUT tokens: a
+            # slot retiring mid-run (eos / max_len) discards the rest of
+            # its accepted run, so the unconsumed tail must not inflate
+            # the reported rate
+            self.stats["draft_accepted"] += min(used, int(n_acc[i]))
         return True
 
     def _decode_rows_reference(self) -> np.ndarray:
@@ -934,7 +1175,8 @@ class ServingEngine:
             )
             self.stats["per_row_forward_calls"] += 1
             out[i] = int(steps_mod.sample_tokens(
-                lg[:, -1], self._next_key(), temp
+                lg[:, -1], self._next_key(), temp,
+                fold=jnp.asarray(self.slot_pos[i:i + 1], jnp.int32),
             )[0])
         return out
 

@@ -186,3 +186,130 @@ def test_allocator_matches_reference_model(num_pages, n_ops, seed):
     _check_agreement(alloc, model)
     assert alloc.free_pages == num_pages
     assert alloc.reserved == 0
+
+
+# ---------------------------------------------------------------------------
+# LRU retention (refcount-0 pages parked for cross-residency prefix hits)
+# ---------------------------------------------------------------------------
+
+
+class RetainModel(RefModel):
+    """RefModel extended with the retention contract: released pages may
+    park in a bounded LRU pool; they count as available, any grant digs
+    into them LRU-first (reporting evictions), and ``revive`` turns a
+    retained page back into a refcount-1 holder."""
+
+    def __init__(self, num_pages, retain_limit):
+        super().__init__(num_pages)
+        self.retain_limit = retain_limit
+        self.retained = []  # LRU order: index 0 evicts first
+        self.evicted_log = []
+
+    @property
+    def available(self):
+        return len(self.free) + len(self.retained) - self.reserved
+
+    def evict(self, n):
+        pages, self.retained = self.retained[:n], self.retained[n:]
+        self.free.update(pages)
+        self.evicted_log.extend(pages)
+        return pages
+
+    def grant(self, pages, reserve=0):
+        need = len(pages) - len(self.free)
+        if need > 0:
+            self.evict(need)
+        super().grant(pages, reserve)
+
+    def release_retain(self, pages):
+        freed = []
+        for p in pages:
+            assert self.ref.get(p, 0) >= 1
+            self.ref[p] -= 1
+            if self.ref[p] == 0:
+                del self.ref[p]
+                if self.retain_limit > 0:
+                    if len(self.retained) >= self.retain_limit:
+                        self.evict(1)
+                    self.retained.append(p)
+                else:
+                    self.free.add(p)
+                    freed.append(p)
+        return freed
+
+    def revive(self, page):
+        assert page in self.retained and page not in self.ref
+        self.retained.remove(page)
+        self.ref[page] = 1
+
+
+def _check_retention_agreement(alloc: PageAllocator, model: RetainModel):
+    assert set(alloc._free) == model.free
+    assert list(alloc._retained) == model.retained
+    for p in range(model.num_pages):
+        assert int(alloc.refcount[p]) == model.ref.get(p, 0), p
+    # a page is exactly one of: free, retained, held
+    held = set(model.ref)
+    assert not (model.free & set(model.retained))
+    assert not (held & set(model.retained))
+    assert not (model.free & held)
+    assert (
+        len(model.free) + len(model.retained) + len(held) == model.num_pages
+    )
+    assert alloc.available == model.available
+    assert alloc.retained_pages == len(model.retained)
+    assert alloc.held_pages == len(held)
+    assert len(model.retained) <= model.retain_limit
+
+
+@settings(max_examples=60, deadline=None)
+@given(
+    num_pages=st.integers(1, 24),
+    retain_limit=st.integers(0, 8),
+    n_ops=st.integers(1, 80),
+    seed=st.integers(0, 2**16),
+)
+def test_allocator_retention_matches_reference_model(
+    num_pages, retain_limit, n_ops, seed
+):
+    rng = np.random.default_rng(seed)
+    alloc = PageAllocator(num_pages, retain_limit=retain_limit)
+    model = RetainModel(num_pages, retain_limit)
+    evicted_log = []
+    alloc.on_evict = evicted_log.extend
+    holders: list[list] = []
+
+    for _ in range(n_ops):
+        op = rng.integers(0, 4)
+        if op == 0:  # admission
+            n = int(rng.integers(0, 4))
+            pages = alloc.alloc(n)
+            if model.can_alloc(n, 0):
+                assert pages is not None
+                model.grant(pages)
+                holders.append(list(pages))
+            else:
+                assert pages is None
+        elif op == 1 and holders:  # retire with retention
+            h = holders.pop(rng.integers(len(holders)))
+            freed = alloc.release(h, retain=True)
+            assert freed == model.release_retain(h)
+        elif op == 2 and holders:  # retire without retention
+            h = holders.pop(rng.integers(len(holders)))
+            freed = alloc.release(h)
+            assert freed == model.release(h)
+        elif op == 3 and model.retained:  # prefix hit on a retained page
+            page = model.retained[rng.integers(len(model.retained))]
+            assert alloc.is_retained(page)
+            alloc.revive(page)
+            model.revive(page)
+            holders.append([page])
+        # evictions surfaced to the owner must match the model exactly
+        # (order included: the engine drops index entries from them)
+        assert evicted_log == model.evicted_log
+        _check_retention_agreement(alloc, model)
+
+    for h in holders:
+        assert alloc.release(h, retain=True) == model.release_retain(h)
+    _check_retention_agreement(alloc, model)
+    assert alloc.free_pages + alloc.retained_pages == num_pages

@@ -244,6 +244,105 @@ def test_infeasible_request_still_truncates_as_last_resort(serving):
 
 
 # ---------------------------------------------------------------------------
+# cached-prefix LRU retention (sharing across non-overlapping residencies)
+# ---------------------------------------------------------------------------
+
+
+def test_retention_shares_across_non_overlapping_residencies(serving):
+    """With ``prefix_retain`` on, a request arriving AFTER the donor
+    fully retired (pool logically drained) still maps the donor's
+    retained prefix pages — counted as ``retained_hits`` — and stays
+    token-identical to a fresh engine."""
+    common = (np.arange(40) * 3) % 256
+    eng = serving.engine(max_batch=2, page_size=16, prefix_retain=8)
+    eng.submit(Request(rid=0, prompt=common, max_tokens=4))
+    eng.run_to_completion()  # donor fully retired; pages parked, indexed
+    assert eng._allocator.retained_pages > 0
+    assert eng._allocator.held_pages == 0
+    eng.submit(Request(rid=1, prompt=common.copy(), max_tokens=6))
+    done = {r.rid: r.generated for r in eng.run_to_completion()}
+    assert eng.stats["retained_hits"] >= 2, eng.stats
+    fresh, _ = _gen(serving, [(common.copy(), 6)], max_batch=2, page_size=16)
+    assert done[1] == fresh[0]
+
+
+def test_retention_off_by_default_frees_immediately(serving):
+    eng = serving.engine(max_batch=2, page_size=16)
+    eng.submit(Request(rid=0, prompt=(np.arange(36) * 5) % 256, max_tokens=3))
+    eng.run_to_completion()
+    assert eng.prefix_retain == 0
+    assert eng._allocator.retained_pages == 0
+    assert eng._allocator.free_pages == eng.num_pages
+    assert not eng._prefix_index
+
+
+def test_retention_evicts_lru_under_pressure_no_stale_kv(serving):
+    """Retained pages must be reclaimed (LRU first) before any admission
+    fails or any slot is preempted, their index entries dropped with
+    them — a later unrelated request must never see stale KV."""
+    a = (np.arange(24) * 3 + 1) % 256
+    b = (np.arange(24) * 7 + 2) % 256
+    c = (np.arange(24) * 11 + 3) % 256
+    # pool of 6 pages, every prompt needs 3 + growth: serving b then c
+    # must evict a's retained pages
+    eng = serving.engine(
+        max_batch=1,
+        page_size=8,
+        num_pages=6,
+        prefix_retain=6,
+        admission="optimistic",
+    )
+    for rid, p in enumerate((a, b, c)):
+        eng.submit(Request(rid=rid, prompt=p, max_tokens=4))
+    done = {r.rid: r.generated for r in eng.run_to_completion()}
+    assert len(done) == 3
+    for r in eng.finished:
+        assert not r.truncated and r.error is None
+    for rid, p in enumerate((a, b, c)):
+        fresh, _ = _gen(serving, [(p.copy(), 4)], max_batch=1, page_size=8)
+        assert done[rid] == fresh[0], rid
+    # the index only names pages the allocator still retains
+    retained = {
+        pg for pg in range(eng.num_pages) if eng._allocator.is_retained(pg)
+    }
+    assert set(eng._page_key) == retained
+
+
+def test_retained_page_revival_keeps_cow_fork_correct(serving):
+    """A retained block may serve as a COW fork source: the copy must
+    read valid KV (retained pages are never scrubbed or granted while
+    indexed) and the follower's output must match a fresh engine."""
+    common = (np.arange(28) * 9 + 4) % 256
+    eng = serving.engine(max_batch=2, page_size=8, prefix_retain=8)
+    eng.submit(Request(rid=0, prompt=common, max_tokens=3))
+    eng.run_to_completion()
+    assert eng._allocator.retained_pages > 0
+    cut = 20  # ends inside retained block 2 -> full-block hits + fork
+    eng.submit(Request(rid=1, prompt=common[:cut].copy(), max_tokens=5))
+    done = {r.rid: r.generated for r in eng.run_to_completion()}
+    assert eng.stats["retained_hits"] >= 1, eng.stats
+    assert eng.stats["cow_forks"] >= 1, eng.stats
+    fresh, _ = _gen(
+        serving, [(common[:cut].copy(), 5)], max_batch=2, page_size=8
+    )
+    assert done[1] == fresh[0]
+
+
+def test_retention_with_speculative_decode(serving):
+    """Retention + speculative decoding compose: cross-residency prefix
+    hits on blocks written by accepted runs, token-identical output."""
+    common = (np.arange(20) * 3 + 2) % 256
+    eng = serving.engine(page_size=8, prefix_retain=8, speculative=2)
+    eng.submit(Request(rid=0, prompt=common, max_tokens=10))
+    eng.run_to_completion()
+    eng.submit(Request(rid=1, prompt=common.copy(), max_tokens=6))
+    done = {r.rid: r.generated for r in eng.run_to_completion()}
+    assert eng.stats["retained_hits"] >= 2, eng.stats
+    fresh, _ = _gen(serving, [(common.copy(), 6)], page_size=8, speculative=2)
+    assert done[1] == fresh[0]
+
+
+# ---------------------------------------------------------------------------
 # randomized serving soak (slow: dedicated CI step)
 # ---------------------------------------------------------------------------
 
