@@ -1,86 +1,151 @@
-"""§Perf hillclimb driver: runs the hypothesis->change->re-analyse ladder
-for the three selected cells and appends every variant to
-artifacts/hillclimb.jsonl.
+"""Block-size hillclimb for the blocked SAMD kernels.
 
-Cells (per the assignment's selection rule):
-  A. arctic-480b/decode_32k    — most representative of the paper's
-     technique (SAMD weight packing) AND the worst memory-roofline cell;
-     ladder: bf16 -> w8 -> w4 -> w2 -> w2+kv8.
-  B. zamba2-7b/prefill_32k     — most collective-bound at baseline
-     (FSDP weight re-gathers x81 layers);
-     ladder: FSDP baseline -> serve-mode 1-D sharding -> +seq-parallel
-     activations.
-  C. qwen1.5-32b/train_4k      — the big dense-train cell;
-     ladder: baseline -> seq-parallel activations -> grad-accum
-     microbatching (bsz/2 per microbatch halves live activations).
+Runs the hypothesis->change->re-measure ladder over the tunable block
+shapes of ``samd_matmul`` (reduction block ``block_kw``) and
+``samd_conv2d`` (channel block ``block_cw``) on the VGG-B layer shapes at
+bits in {2, 4, 8} — the sweep that selected the kernels' defaults. Conv
+cells time the full layer; matmul cells time the layer's im2col GEMM
+(M = H*W, K = 9*C_in, N = C_out) plus a decode-shaped GEMM (M = 8, the
+serving draft's regime).
 
-Run AFTER the baseline sweep:
-  PYTHONPATH=src python -m benchmarks.hillclimb
+On CPU hosts the ladder times the unrolled-jnp lowerings (what CPU CI and
+the serving draft actually run); on a TPU it times the Mosaic kernels,
+where ``block_n`` joins the sweep (multi-MXU-tile N-blocks). Re-run on
+real TPU hardware to retune the Pallas defaults.
+
+Every variant is appended to ``artifacts/hillclimb.jsonl``; the winner
+per cell is printed at the end.
+
+Run:  PYTHONPATH=src python -m benchmarks.hillclimb [--repeats 3]
 """
 from __future__ import annotations
 
+import argparse
+import json
 import os
+import time
 
-os.environ.setdefault(
-    "XLA_FLAGS", "--xla_force_host_platform_device_count=512"
-)
+import jax
+import jax.numpy as jnp
+import numpy as np
 
-import json  # noqa: E402
+# (name, c_in, c_out, h, w) — the two acceptance layers plus the ladder's
+# smoke layer; pass --full for the whole table
+LAYER_PICKS = ("conv1_1", "conv3_1", "conv5_1")
+BITS = (2, 4, 8)
+KW_LADDER = (32, 64, 128, 256)
+CW_LADDER = (16, 32, 64, 128)
+BN_LADDER = (128, 256, 512)   # TPU-only (the jnp lowerings have no N block)
 
-import jax  # noqa: E402
+
+def _time(fn, *args, repeats=3):
+    jax.block_until_ready(fn(*args))
+    runs = []
+    for _ in range(repeats):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn(*args))
+        runs.append(time.perf_counter() - t0)
+    return float(min(runs)) * 1e6, [r * 1e6 for r in runs]
 
 
-VARIANTS = [
-    # --- Cell A: the paper's technique on its best target ---------------
-    dict(tag="A0-baseline-bf16", arch="arctic-480b", shape="decode_32k"),
-    dict(tag="A1-samd-w8", arch="arctic-480b", shape="decode_32k",
-         quant_bits=8),
-    dict(tag="A2-samd-w4", arch="arctic-480b", shape="decode_32k",
-         quant_bits=4),
-    dict(tag="A3-samd-w2", arch="arctic-480b", shape="decode_32k",
-         quant_bits=2),
-    dict(tag="A4-samd-w2-kv8", arch="arctic-480b", shape="decode_32k",
-         quant_bits=2, kv_bits=8),
-    # --- Cell B: collective-bound prefill --------------------------------
-    dict(tag="B0-baseline-fsdp", arch="zamba2-7b", shape="prefill_32k"),
-    dict(tag="B1-serve-sharding", arch="zamba2-7b", shape="prefill_32k",
-         mode_override="serve"),
-    dict(tag="B2-serve+seqacts", arch="zamba2-7b", shape="prefill_32k",
-         mode_override="serve", seq_shard_acts=True),
-    dict(tag="B3-serve+w4", arch="zamba2-7b", shape="prefill_32k",
-         mode_override="serve", quant_bits=4),
-    # --- Cell C: dense train ---------------------------------------------
-    dict(tag="C0-baseline", arch="qwen1.5-32b", shape="train_4k",
-         remat="block"),
-    dict(tag="C1-seq-parallel", arch="qwen1.5-32b", shape="train_4k",
-         remat="block", seq_shard_acts=True),
-    dict(tag="C2-no-remat", arch="qwen1.5-32b", shape="train_4k",
-         remat="none"),
-]
+def matmul_variants(m, k, n, bits, repeats, on_tpu):
+    from repro.kernels import samd_matmul as mm
+    from repro.quant.config import QuantConfig
+    from repro.quant.packing import pack_weights
+
+    cfg = QuantConfig(bits=bits)
+    rng = np.random.default_rng(0)
+    x = jnp.asarray(rng.normal(size=(m, k)), jnp.float32)
+    w = jnp.asarray(rng.normal(size=(k, n)), jnp.float32)
+    packed, scale = pack_weights(w, cfg)
+    for bkw in KW_LADDER:
+        bns = BN_LADDER if on_tpu else (None,)
+        for bn in bns:
+            if on_tpu:
+                def f(x, p, s, bkw=bkw, bn=bn):
+                    return mm.samd_matmul(x, p, s, k, cfg, block_kw=bkw,
+                                          block_n=bn)
+                params = {"block_kw": bkw, "block_n": bn}
+            else:
+                def f(x, p, s, bkw=bkw):
+                    return mm.samd_matmul_xla(x, p, s, k, cfg,
+                                              block_kw=bkw)
+                params = {"block_kw": bkw}
+            us, runs = _time(f, x, packed, scale, repeats=repeats)
+            yield params, us, runs
+
+
+def conv_variants(c_in, c_out, h, w, bits, repeats, on_tpu):
+    from repro.kernels import samd_conv as cv
+    from repro.quant.config import QuantConfig
+    from repro.quant.packing import pack_conv_weights
+
+    cfg = QuantConfig(bits=bits)
+    rng = np.random.default_rng(0)
+    x = jnp.asarray(rng.normal(size=(c_in, h, w)), jnp.float32)
+    wt = jnp.asarray(rng.normal(size=(3, 3, c_in, c_out)), jnp.float32)
+    packed, scale = pack_conv_weights(wt, cfg)
+    for bcw in CW_LADDER:
+        bns = BN_LADDER if on_tpu else (None,)
+        for bn in bns:
+            if on_tpu:
+                def f(x, p, s, bcw=bcw, bn=bn):
+                    return cv.samd_conv2d(x, p, s, cfg, block_cw=bcw,
+                                          block_n=bn)
+                params = {"block_cw": bcw, "block_n": bn}
+            else:
+                def f(x, p, s, bcw=bcw):
+                    return cv.samd_conv2d_xla(x, p, s, cfg, block_cw=bcw)
+                params = {"block_cw": bcw}
+            us, runs = _time(f, x, packed, scale, repeats=repeats)
+            yield params, us, runs
 
 
 def main(out="artifacts/hillclimb.jsonl"):
-    from repro.launch.dryrun import lower_cell
+    from repro.configs.vggb import VGGB_LAYERS
 
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true",
+                    help="all 10 VGG-B layers (default: "
+                         + ",".join(LAYER_PICKS) + ")")
+    ap.add_argument("--repeats", type=int, default=3)
+    args = ap.parse_args()
+
+    layers = VGGB_LAYERS if args.full else [
+        l for l in VGGB_LAYERS if l[0] in LAYER_PICKS
+    ]
+    on_tpu = jax.default_backend() == "tpu"
+    lowering = "pallas-mosaic" if on_tpu else "jnp-unrolled"
     os.makedirs(os.path.dirname(out), exist_ok=True)
-    for v in VARIANTS:
-        v = dict(v)
-        tag = v.pop("tag")
-        arch = v.pop("arch")
-        shape = v.pop("shape")
-        print(f"\n######## {tag}: {arch}/{shape} {v} ########")
-        try:
-            r = lower_cell(arch, shape, **v)
-        except Exception as e:  # noqa: BLE001
-            import traceback
-
-            traceback.print_exc()
-            r = {"cell": f"{arch}/{shape}", "status": "FAILED",
-                 "error": str(e)}
-        r["tag"] = tag
-        with open(out, "a") as f:
-            f.write(json.dumps(r) + "\n")
-        jax.clear_caches()
+    winners = []
+    with open(out, "a") as fh:
+        for (name, c_in, c_out, h, w) in layers:
+            for bits in BITS:
+                cells = [
+                    (f"conv/{name}/b{bits}",
+                     conv_variants(c_in, c_out, h, w, bits, args.repeats,
+                                   on_tpu)),
+                    (f"matmul/{name}-im2col/b{bits}",
+                     matmul_variants(h * w, 9 * c_in, c_out, bits,
+                                     args.repeats, on_tpu)),
+                    (f"matmul/{name}-decode/b{bits}",
+                     matmul_variants(8, 9 * c_in, c_out, bits,
+                                     args.repeats, on_tpu)),
+                ]
+                for cell, variants in cells:
+                    best = None
+                    for params, us, runs in variants:
+                        rec = {"cell": cell, "lowering": lowering,
+                               "params": params, "us": us, "runs_us": runs}
+                        fh.write(json.dumps(rec) + "\n")
+                        print(f"{cell} {params}: {us:.0f}us")
+                        if best is None or us < best[1]:
+                            best = (params, us)
+                    winners.append((cell, *best))
+                    jax.clear_caches()
+    print("\n# winners")
+    for cell, params, us in winners:
+        print(f"{cell}: {params} ({us:.0f}us)")
 
 
 if __name__ == "__main__":

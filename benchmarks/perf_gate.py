@@ -17,6 +17,12 @@ When a benchmark's MEANING changes (e.g. a row's backend is swapped),
 rename the row rather than reusing the name: the gate must only ever
 compare like with like.
 
+The same gate diffs the VGG-B kernel artifact (BENCH_vggb.json) with
+``--metric us --lower-is-better``: those rows are best-of-N LATENCIES,
+so a regression is cur > base * (1 + threshold). The analytic model rows
+(``a57-model/``, ``tpu-model``) are excluded there — they are
+deterministic functions of the op-count model, not measurements.
+
 Besides the console report, the gate renders a baseline-vs-head markdown
 table. Inside GitHub Actions it is appended to ``$GITHUB_STEP_SUMMARY``
 automatically, so every run page shows the comparison without digging
@@ -46,7 +52,7 @@ def load_rows(path: str, metric: str) -> dict:
 
 
 def classify(baseline: dict, current: dict, threshold: float,
-             exclude: tuple = ()):
+             exclude: tuple = (), lower_is_better: bool = False):
     """One record per row: (name, base, cur, ratio, verdict). The SINGLE
     source of the gate's row classification — the console report, the
     exit code, and the markdown step summary all render from these, so
@@ -54,7 +60,10 @@ def classify(baseline: dict, current: dict, threshold: float,
 
     Verdicts: 'excluded' (name matches an ``exclude`` substring), 'new' /
     'removed' (present in only one artifact — reported, never gated),
-    'REGRESSION' (cur < base * (1 - threshold); higher is better), 'OK'.
+    'REGRESSION', 'OK'. By default higher is better (tokens/s): a row
+    regresses when cur < base * (1 - threshold). With ``lower_is_better``
+    (latency metrics like the vggb us rows) the test flips: a row
+    regresses when cur > base * (1 + threshold).
     """
     records = []
     for name in sorted(set(baseline) | set(current)):
@@ -67,22 +76,25 @@ def classify(baseline: dict, current: dict, threshold: float,
             verdict, ratio = "removed", None
         else:
             ratio = cur / base if base else float("inf")
-            verdict = ("REGRESSION" if cur < base * (1.0 - threshold)
-                       else "OK")
+            if lower_is_better:
+                regressed = cur > base * (1.0 + threshold)
+            else:
+                regressed = cur < base * (1.0 - threshold)
+            verdict = "REGRESSION" if regressed else "OK"
         records.append((name, base, cur, ratio, verdict))
     return records
 
 
 def compare(baseline: dict, current: dict, threshold: float,
-            exclude: tuple = ()):
+            exclude: tuple = (), lower_is_better: bool = False):
     """Returns (report_lines, regressions) rendered from ``classify``.
 
-    A row regresses when current < baseline * (1 - threshold). Higher is
-    assumed better (tokens/s). Rows whose name contains any ``exclude``
-    substring are skipped."""
+    Rows whose name contains any ``exclude`` substring are skipped; see
+    :func:`classify` for the regression rule in each direction."""
     lines, regressions = [], []
     for name, base, cur, ratio, verdict in classify(baseline, current,
-                                                    threshold, exclude):
+                                                    threshold, exclude,
+                                                    lower_is_better):
         if verdict == "excluded":
             lines.append(f"  {name}: excluded")
         elif verdict == "new":
@@ -100,11 +112,14 @@ def compare(baseline: dict, current: dict, threshold: float,
 
 
 def markdown_report(baseline: dict, current: dict, threshold: float,
-                    exclude: tuple = ()) -> list[str]:
+                    exclude: tuple = (), lower_is_better: bool = False,
+                    metric: str = "tokens/s") -> list[str]:
     """Baseline-vs-head comparison as GitHub-flavored markdown lines,
     rendered from the same ``classify`` records as the console gate."""
+    direction = "lower is better" if lower_is_better else "higher is better"
     md = [
-        f"### perf gate — tokens/s, threshold {threshold:.0%}",
+        f"### perf gate — {metric} ({direction}), "
+        f"threshold {threshold:.0%}",
         "",
         "| row | baseline | head | ratio | verdict |",
         "| --- | ---: | ---: | ---: | --- |",
@@ -112,7 +127,8 @@ def markdown_report(baseline: dict, current: dict, threshold: float,
     pretty = {"new": "new — ignored", "removed": "removed — ignored",
               "REGRESSION": "**REGRESSION**"}
     for name, base, cur, ratio, verdict in classify(baseline, current,
-                                                    threshold, exclude):
+                                                    threshold, exclude,
+                                                    lower_is_better):
         md.append(
             f"| {name} "
             f"| {'' if base is None else f'{base:.2f}'} "
@@ -147,6 +163,10 @@ def main(argv=None) -> int:
     ap.add_argument("--summary", default=None,
                     help="append a markdown comparison table to this file "
                          "(defaults to $GITHUB_STEP_SUMMARY when set)")
+    ap.add_argument("--lower-is-better", action="store_true",
+                    help="treat the metric as a latency (regression = "
+                         "cur > base * (1 + threshold)); use for the "
+                         "vggb us rows")
     args = ap.parse_args(argv)
     exclude = tuple(args.exclude) if args.exclude else ("per_row",)
 
@@ -162,11 +182,16 @@ def main(argv=None) -> int:
         return 0
     baseline = load_rows(args.baseline, args.metric)
     current = load_rows(args.current, args.metric)
-    lines, regressions = compare(baseline, current, args.threshold, exclude)
-    print(f"perf_gate: {args.metric}, threshold {args.threshold:.0%}")
+    lines, regressions = compare(baseline, current, args.threshold, exclude,
+                                 args.lower_is_better)
+    direction = "lower is better" if args.lower_is_better \
+        else "higher is better"
+    print(f"perf_gate: {args.metric} ({direction}), "
+          f"threshold {args.threshold:.0%}")
     print("\n".join(lines))
     _write_summary(
-        markdown_report(baseline, current, args.threshold, exclude),
+        markdown_report(baseline, current, args.threshold, exclude,
+                        args.lower_is_better, metric=args.metric),
         args.summary,
     )
     if regressions:

@@ -338,9 +338,8 @@ def conv_by_scale(x: jax.Array, kernel: jax.Array, bits: int,
     """
     from repro.core.samd import (
         scale_format,
-        unpack_lanes_wide,
+        unpack_signed_product,
         vector_scale_perm,
-        correct_signed_product,
     )
 
     fmt = scale_format(bits, signed, word_bits)
@@ -355,8 +354,8 @@ def conv_by_scale(x: jax.Array, kernel: jax.Array, bits: int,
         kj = kernel[..., j].astype(jnp.int64 if word_bits == 64 else jnp.int32)
         kj_word = kj.astype(fmt.dtype) & jnp.asarray(kmask, fmt.dtype)
         prod = vector_scale_perm(xw, kj_word, fmt)
-        if signed:
-            prod = correct_signed_product(prod, fmt)
-        vals = unpack_lanes_wide(prod, fmt, n)
+        # unpack_signed_product fuses the Fig. 12 borrow fixup with the
+        # wide lane read (no caller-side correct_signed_product needed)
+        vals = unpack_signed_product(prod, fmt, n)
         out = out.at[..., j : j + n].add(vals)
     return out

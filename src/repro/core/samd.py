@@ -359,6 +359,21 @@ def correct_signed_product_perm(prod: jax.Array, fmt: SAMDFormat) -> jax.Array:
     return prod + msb
 
 
+def unpack_signed_product(prod: jax.Array, fmt: SAMDFormat, n: int) -> jax.Array:
+    """Read ``n`` wide lanes out of a signed SAMD product, borrow-corrected.
+
+    The safe entry point for reading product words: a raw signed product is
+    off by one in every lane whose neighbor below is negative (the Fig. 12
+    borrow), so :func:`unpack_lanes_wide` alone silently returns wrong
+    values on signed words. This helper fuses the
+    :func:`correct_signed_product` fixup with the wide read so callers
+    cannot forget it; unsigned formats skip the (unneeded) fixup.
+    """
+    if fmt.signed:
+        prod = correct_signed_product(prod, fmt)
+    return unpack_lanes_wide(prod, fmt, n)
+
+
 # ---------------------------------------------------------------------------
 # Double-word helpers (TPU adaptation: 32x32 -> 64-bit products built from
 # uint32 limbs; XLA on TPU has no native widening multiply).

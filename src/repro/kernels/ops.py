@@ -20,19 +20,56 @@ def _default_interpret() -> bool:
 
 
 def samd_matmul(x: jax.Array, packed: jax.Array, scale: jax.Array, k: int,
-                cfg: QuantConfig, *, block_m: int = 128, block_n: int = 128,
-                block_kw: int = 64, interpret: bool | None = None) -> jax.Array:
-    """Packed-weight matmul: x[..., K] @ dequant(packed)[K, N]."""
-    if interpret is None:
-        interpret = _default_interpret()
+                cfg: QuantConfig, *, block_m: int = 128, block_n: int = 256,
+                block_kw: int = 128, signed: bool = True,
+                interpret: bool | None = None) -> jax.Array:
+    """Packed-weight matmul: x[..., K] @ dequant(packed)[K, N].
+
+    Backend dispatch (the PR 3 pattern): TPU compiles the Pallas kernel
+    to Mosaic; the CPU default is ``samd_matmul_xla`` — the unrolled-jnp
+    lowering of the same K-block loop (the serving draft path and the
+    benchmarks run this); ``interpret=True`` forces the Pallas
+    interpreter (test-only coverage of the kernel body).
+    """
     lead = x.shape[:-1]
     x2 = x.reshape(-1, x.shape[-1])
+    if interpret is None:
+        if _default_interpret():
+            out = _mm.samd_matmul_xla(
+                x2, packed, scale, k, cfg, block_kw=block_kw, signed=signed,
+            )
+            return out.reshape(lead + (out.shape[-1],))
+        interpret = False
     out = _mm.samd_matmul(
         x2, packed, scale, k, cfg,
-        block_m=block_m, block_n=block_n, block_kw=block_kw,
+        block_m=block_m, block_n=block_n, block_kw=block_kw, signed=signed,
         interpret=interpret,
     )
     return out.reshape(lead + (out.shape[-1],))
+
+
+def samd_conv2d(x: jax.Array, packed: jax.Array, scale: jax.Array,
+                cfg: QuantConfig, *, padding: int = 1, block_cw: int = 64,
+                block_n: int = 256, signed: bool = True,
+                interpret: bool | None = None) -> jax.Array:
+    """Blocked 2D conv over SAMD-packed weights (fused im2col).
+
+    x [C_in, H, W] x packed [KH, KW, ceil(C_in/vpw), C_out] ->
+    [OH, OW, C_out]. Dispatch mirrors ``samd_matmul``: TPU -> Mosaic
+    kernel, CPU default -> unrolled-jnp lowering of the same blocked
+    loop, ``interpret=True`` -> Pallas interpreter (tests).
+    """
+    if interpret is None:
+        if _default_interpret():
+            return _conv.samd_conv2d_xla(
+                x, packed, scale, cfg, padding=padding,
+                block_cw=max(block_cw, 128), signed=signed,
+            )
+        interpret = False
+    return _conv.samd_conv2d(
+        x, packed, scale, cfg, padding=padding, block_cw=block_cw,
+        block_n=block_n, signed=signed, interpret=interpret,
+    )
 
 
 def paged_decode_attention(q: jax.Array, k_pages: jax.Array,

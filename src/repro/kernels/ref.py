@@ -6,7 +6,11 @@ import jax.numpy as jnp
 
 from repro.core.conv import ConvPlan
 from repro.quant.config import QuantConfig
-from repro.quant.packing import dequant_weights, unpack_int8_lanes
+from repro.quant.packing import (
+    dequant_conv_weights,
+    dequant_weights,
+    unpack_int8_lanes,
+)
 
 
 def samd_matmul_ref(x: jax.Array, packed: jax.Array, scale: jax.Array,
@@ -60,6 +64,19 @@ def paged_attention_ref(q: jax.Array, k_pages: jax.Array,
     probs = jax.nn.softmax(s, axis=-1)
     out = jnp.einsum("bhgs,bshd->bhgd", probs, vg)
     return out.reshape(b, h, -1).astype(q.dtype)
+
+
+def samd_conv2d_ref(x: jax.Array, packed: jax.Array, scale: jax.Array,
+                    cfg: QuantConfig, padding: int = 1) -> jax.Array:
+    """Dense dequant + XLA conv oracle for the blocked conv2d kernel."""
+    c_in = x.shape[0]
+    w = dequant_conv_weights(packed, scale, c_in, cfg, dtype=jnp.float32)
+    out = jax.lax.conv_general_dilated(
+        x[None].astype(jnp.float32), w, window_strides=(1, 1),
+        padding=[(padding, padding)] * 2,
+        dimension_numbers=("NCHW", "HWIO", "NHWC"),
+    )
+    return out[0].astype(x.dtype)
 
 
 def samd_conv_chunks_ref(x_words: jax.Array, k_word: jax.Array,

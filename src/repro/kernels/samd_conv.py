@@ -1,18 +1,31 @@
-"""Pallas TPU kernel: convolution-as-long-multiplication on the VPU (§5-6).
+"""Pallas TPU kernels for SAMD convolution.
 
-The faithful port of the paper's novel op. Input values are packed at
-lane-stride L into uint32 chunk words; each chunk word is multiplied by the
-kernel word with a synthesized 32x32->64 widening multiply (16-bit limbs —
-the TPU has no scalar wide multiplier, see DESIGN.md), Grys-adjusted for
-signed operands, borrow-fixed (Fig. 12), and its output lanes extracted.
+Two generations live here:
 
-Each VPU op processes an (8, 128) vreg of chunk words = 1024 chunks x
-``lanes_per_chunk`` values — "SAMD within SIMD".
+1. :func:`samd_conv_chunks` — the faithful port of the paper's novel op
+   (conv-as-long-multiplication, §5-6): per-chunk 32x32->64 widening
+   multiplies from 16-bit limbs, Grys signed adjustment, Fig. 12 borrow
+   fixup, lane extraction. It demonstrates the paper's arithmetic on the
+   VPU but is scalar-per-chunk — each output needs a synthesized wide
+   multiply, and the MXU sits idle.
 
-The kernel emits per-chunk extracted lanes [nc, out_lanes]; the final
-overlap-add of the parallelogram regions (taps-1 strided adds) runs as XLA
-ops in ops.py — it is O(taps) adds per output and does not touch the wide
-multiply hot path.
+2. :func:`samd_conv2d` — the production blocked kernel (this PR). SAMD is
+   kept where it pays on TPU: *storage*. Conv weights stay packed in HBM
+   as b-bit lanes along C_in; each grid step copies a packed block to
+   VMEM, unpacks in-register on the VPU, and contracts on the MXU. The
+   im2col is fused into the BlockSpec index maps — the input x is passed
+   KH times with H-axis block size 1, so block index == exact input row
+   (``oh + kh``), and the KW taps are static in-kernel column slices; NO
+   patch matrix is ever materialized. The C_in reduction is blocked with
+   a float32 accumulator scratch carried across grid steps (online
+   accumulation; ragged C_in zero-padded to whole blocks per the PR 2
+   K-block fix), and the per-output-channel scale is applied once at the
+   final store.
+
+The chunk kernel emits per-chunk extracted lanes [nc, out_lanes]; the
+final overlap-add of the parallelogram regions runs as XLA ops in ops.py.
+:func:`samd_conv2d_xla` is the unrolled-jnp lowering of the blocked loop
+for CPU (the PR 3 pattern — the Pallas interpreter stays test-only).
 """
 from __future__ import annotations
 
@@ -21,9 +34,12 @@ import functools
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
 
 from repro.core.conv import ConvPlan
 from repro.core import masks as masks_mod
+from repro.kernels.samd_matmul import unpack_codes
+from repro.quant.config import QuantConfig
 
 
 def _wide_mul_u32(a, b):
@@ -113,3 +129,180 @@ def samd_conv_chunks(
         ),
         interpret=interpret,
     )(x_words[:, None], k_word.reshape(1, 1))
+
+
+# ---------------------------------------------------------------------------
+# blocked 2D conv over SAMD-packed weights (fused im2col, MXU contraction)
+# ---------------------------------------------------------------------------
+
+def _conv2d_kernel(*refs, kh_taps, kw_taps, ow, bits, lane_width, vpw,
+                   signed, n_ci_steps):
+    # refs: x_ref x KH, w_ref, s_ref, o_ref, acc_ref
+    x_refs = refs[:kh_taps]
+    w_ref, s_ref, o_ref, acc_ref = refs[kh_taps:]
+    ci = pl.program_id(2)
+
+    @pl.when(ci == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    acc = acc_ref[...]
+    for kh in range(kh_taps):
+        row = x_refs[kh][:, 0, :]                        # [bc, Wp]
+        for kw in range(kw_taps):
+            codes = unpack_codes(
+                w_ref[kh, kw], bits, lane_width, vpw, signed
+            )                                            # [bc, bn]
+            patch = row[:, kw:kw + ow]                   # [bc, OW] static slice
+            acc = acc + jax.lax.dot_general(
+                patch, codes.astype(patch.dtype),
+                (((0,), (0,)), ((), ())),
+                preferred_element_type=jnp.float32,
+            )
+    acc_ref[...] = acc
+
+    @pl.when(ci == n_ci_steps - 1)
+    def _store():
+        o_ref[...] = (
+            acc_ref[...] * s_ref[...].astype(jnp.float32)
+        )[None].astype(o_ref.dtype)
+
+
+def _pad_conv_operands(x, packed, padding, vpw, bcw):
+    """SAME-style spatial padding + zero-padding of the channel reduction
+    to whole word-blocks (ragged C_in blocks would read undefined words)."""
+    c_in, h, w = x.shape
+    cw = packed.shape[2]
+    cw_pad = pl.cdiv(cw, bcw) * bcw - cw
+    if cw_pad:
+        packed = jnp.pad(packed, ((0, 0), (0, 0), (0, cw_pad), (0, 0)))
+    cwp = cw + cw_pad
+    x = jnp.pad(
+        x,
+        ((0, cwp * vpw - c_in), (padding, padding), (padding, padding)),
+    )
+    return x, packed, cwp
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("cfg", "padding", "block_cw", "block_n", "signed",
+                     "interpret"),
+)
+def samd_conv2d(
+    x: jax.Array,
+    packed: jax.Array,
+    scale: jax.Array,
+    cfg: QuantConfig,
+    *,
+    padding: int = 1,
+    block_cw: int = 64,
+    block_n: int = 256,
+    signed: bool = True,
+    interpret: bool = False,
+) -> jax.Array:
+    """out[OH, OW, C_out] = conv2d(x[C_in, H, W], dequant(packed), stride 1).
+
+    ``packed``/``scale`` come from :func:`repro.quant.packing.pack_conv_weights`
+    — uint32 [KH, KW, ceil(C_in/vpw), C_out] with lanes along C_in and one
+    float32 scale per output channel.
+
+    Grid: (OH, N-blocks, C_in-blocks) with the channel reduction innermost
+    so the f32 accumulator scratch survives across reduction steps. The
+    fused im2col: x is passed KH times, each alias blocked to a single
+    input row picked by the index map ``(ci, oh + kh, 0)`` (H-axis block
+    size 1 makes the block index an exact row index — the trick that lets
+    BlockSpecs express overlapping windows), and the KW taps are static
+    column slices of that row. One weight-block unpack feeds KH*KW MXU
+    contractions.
+    """
+    c_in, h, w = x.shape
+    kh_taps, kw_taps, cw, n = packed.shape[0], packed.shape[1], \
+        packed.shape[2], packed.shape[3]
+    vpw = cfg.values_per_word
+    assert cw * vpw >= c_in, (cw, vpw, c_in)
+    oh = h + 2 * padding - kh_taps + 1
+    ow = w + 2 * padding - kw_taps + 1
+    bn = min(block_n, n)
+    bcw = min(block_cw, cw)
+    x, packed, cwp = _pad_conv_operands(x, packed, padding, vpw, bcw)
+    wp = x.shape[2]
+    bc = bcw * vpw
+    grid = (oh, pl.cdiv(n, bn), cwp // bcw)
+
+    x_specs = [
+        pl.BlockSpec((bc, 1, wp), functools.partial(
+            lambda i, j, ci, kh: (ci, i + kh, 0), kh=kh))
+        for kh in range(kh_taps)
+    ]
+    out = pl.pallas_call(
+        functools.partial(
+            _conv2d_kernel, kh_taps=kh_taps, kw_taps=kw_taps, ow=ow,
+            bits=cfg.bits, lane_width=cfg.lane_width, vpw=vpw,
+            signed=signed, n_ci_steps=grid[2],
+        ),
+        grid=grid,
+        in_specs=x_specs + [
+            pl.BlockSpec((kh_taps, kw_taps, bcw, bn),
+                         lambda i, j, ci: (0, 0, ci, j)),
+            pl.BlockSpec((1, bn), lambda i, j, ci: (0, j)),
+        ],
+        out_specs=pl.BlockSpec((1, ow, bn), lambda i, j, ci: (i, 0, j)),
+        out_shape=jax.ShapeDtypeStruct((oh, ow, n), x.dtype),
+        scratch_shapes=[pltpu.VMEM((ow, bn), jnp.float32)],
+        interpret=interpret,
+    )(*([x] * kh_taps), packed, scale)
+    return out
+
+
+@functools.partial(
+    jax.jit, static_argnames=("cfg", "padding", "block_cw", "signed"),
+)
+def samd_conv2d_xla(
+    x: jax.Array,
+    packed: jax.Array,
+    scale: jax.Array,
+    cfg: QuantConfig,
+    *,
+    padding: int = 1,
+    block_cw: int = 128,
+    signed: bool = True,
+) -> jax.Array:
+    """Unrolled-jnp lowering of the blocked conv loop (the CPU backend).
+
+    Identical math to :func:`samd_conv2d`: per (C_in-block, kh, kw) step,
+    unpack the packed weight block to integer codes and contract the
+    shifted input window against them in float32 — an implicit im2col as
+    KH*KW strided views, never a materialized patch matrix. XLA fuses the
+    unpack into the matmul prologue and runs the contraction on the native
+    matmul path, which is what makes the packed bench rows beat
+    ``lax.conv`` int8 on CPU hosts.
+    """
+    c_in, h, w = x.shape
+    kh_taps, kw_taps, cw, n = packed.shape
+    vpw = cfg.values_per_word
+    assert cw * vpw >= c_in, (cw, vpw, c_in)
+    oh = h + 2 * padding - kh_taps + 1
+    ow = w + 2 * padding - kw_taps + 1
+    bcw = min(block_cw, cw)
+    x, packed, cwp = _pad_conv_operands(x, packed, padding, vpw, bcw)
+    bc = bcw * vpw
+    acc = jnp.zeros((oh * ow, n), jnp.float32)
+    for cb in range(cwp // bcw):
+        xb = x[cb * bc:(cb + 1) * bc]
+        for kh in range(kh_taps):
+            for kw in range(kw_taps):
+                codes = unpack_codes(
+                    packed[kh, kw, cb * bcw:(cb + 1) * bcw],
+                    cfg.bits, cfg.lane_width, vpw, signed,
+                )                                        # [bc, n]
+                patch = jax.lax.dynamic_slice(
+                    xb, (0, kh, kw), (bc, oh, ow)
+                ).reshape(bc, oh * ow)
+                acc = acc + jax.lax.dot_general(
+                    patch, codes.astype(x.dtype),
+                    (((0,), (0,)), ((), ())),
+                    preferred_element_type=jnp.float32,
+                )
+    out = acc * scale.astype(jnp.float32)
+    return out.reshape(oh, ow, n).astype(x.dtype)

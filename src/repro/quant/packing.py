@@ -63,6 +63,50 @@ def dequant_weights(packed: jax.Array, scale: jax.Array, k: int,
     return (q.astype(jnp.float32) * scale).astype(dtype)
 
 
+def pack_conv_weights(w: jax.Array, cfg: QuantConfig):
+    """Quantize + SAMD-pack a conv weight W[KH, KW, C_in, C_out].
+
+    The reduction axis of a conv is (KH, KW, C_in); scales are per OUTPUT
+    channel, so the whole (KH * KW * C_in) fan-in of a filter shares one
+    scale and the blocked kernel can accumulate raw codes across every
+    (kh, kw, ci) grid step and dequantize once at the store. Lanes pack
+    along C_in — the innermost reduction axis, so a (bcw, bn) weight block
+    unpacks to contiguous (bcw * vpw, bn) values exactly like the matmul
+    layout.
+
+    Returns (packed uint32 [KH, KW, ceil(C_in/vpw), C_out], scale f32
+    [1, C_out]).
+    """
+    if cfg.group_size is not None:
+        raise NotImplementedError("conv packing is per-output-channel only")
+    kh, kw, c_in, c_out = w.shape
+    q, scale = quantize_symmetric(
+        w.reshape(kh * kw * c_in, c_out), cfg.bits, axis=0
+    )
+    fmt = _fmt(cfg)
+    q = q.reshape(kh, kw, c_in, c_out)
+    words = samd.pack(jnp.moveaxis(q, 2, -1), fmt)      # [kh, kw, c_out, cw]
+    packed = jnp.moveaxis(words, -1, 2)
+    return packed, scale
+
+
+def unpack_conv_weights(packed: jax.Array, c_in: int,
+                        cfg: QuantConfig) -> jax.Array:
+    """Inverse of :func:`pack_conv_weights` (codes only): int32
+    [KH, KW, C_in, C_out]."""
+    fmt = _fmt(cfg)
+    pt = jnp.moveaxis(packed, 2, -1)
+    vals = samd.unpack(pt, fmt, c_in)
+    return jnp.moveaxis(vals, -1, 2)
+
+
+def dequant_conv_weights(packed: jax.Array, scale: jax.Array, c_in: int,
+                         cfg: QuantConfig, dtype=jnp.float32) -> jax.Array:
+    """Dense [KH, KW, C_in, C_out] conv weight from the packed form."""
+    q = unpack_conv_weights(packed, c_in, cfg)
+    return (q.astype(jnp.float32) * scale.reshape(1, 1, 1, -1)).astype(dtype)
+
+
 def pack_int8_lanes(vals: jax.Array) -> jax.Array:
     """int8 [..., D] -> uint32 [..., D//4]: four 8-bit lanes per word along
     the trailing axis. This is the SAMD storage format of the paged KV pool

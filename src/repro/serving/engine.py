@@ -388,8 +388,12 @@ class ServingEngine:
                 self.draft_quant = self.quant
                 self._draft_params = self.params
             else:
+                # backend="pallas" routes the draft's packed matmuls
+                # through kernels.ops.samd_matmul (Mosaic on TPU, the
+                # unrolled K-block lowering on CPU) instead of
+                # dequantize-then-matmul — the draft reads packed bytes
                 dq = draft_quant if draft_quant is not None \
-                    else QuantConfig(bits=4)
+                    else QuantConfig(bits=4, backend="pallas")
                 self.draft_quant = dq
                 self._draft_params = (
                     quantize_params(raw_params, template, dq)

@@ -1,0 +1,250 @@
+"""Blocked SAMD kernels vs the pure-jnp oracles (both lowerings).
+
+The equivalence contract for this PR's kernels:
+
+  * ``samd_matmul`` / ``samd_matmul_xla`` vs ``ref.samd_matmul_ref``
+  * ``samd_conv2d`` / ``samd_conv2d_xla`` vs ``ref.samd_conv2d_ref``
+
+across bits in {2, 4, 8}, ragged M/N/K (including K that is NOT a
+multiple of ``values_per_word * block_kw`` — the zero-padded last block
+must contribute exact zeros, the PR 2 regression class), SIGNED and
+UNSIGNED lanes, and both lowerings (the unrolled-jnp CPU backend and the
+Pallas interpreter running the actual kernel body with deliberately tiny
+block shapes so every grid-edge case is hit).
+
+Plus the satellite regression test: ``samd.unpack_signed_product`` must
+bake the Fig. 12 borrow fixup into the wide-lane read — the documented
+footgun where a raw signed product read is off by one wherever the lane
+below is negative.
+"""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core import samd
+from repro.kernels import ops, ref
+from repro.kernels import samd_conv as _cv
+from repro.kernels import samd_matmul as _mm
+from repro.quant import QuantConfig, pack_weights
+from repro.quant.packing import pack_conv_weights
+
+
+def _assert_close(got, want, tag):
+    got = np.asarray(got, np.float32)
+    want = np.asarray(want, np.float32)
+    tol = 1e-3 * max(1.0, float(np.max(np.abs(want))))
+    np.testing.assert_allclose(got, want, atol=tol, rtol=1e-4,
+                               err_msg=str(tag))
+
+
+# ---------------------------------------------------------------------------
+# matmul
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=25, deadline=None)
+@given(
+    bits=st.sampled_from([2, 4, 8]),
+    m=st.integers(1, 33),
+    k=st.integers(1, 300),
+    n=st.integers(1, 70),
+    seed=st.integers(0, 2**16),
+)
+def test_matmul_xla_lowering_matches_ref(bits, m, k, n, seed):
+    """The CPU serving/bench backend across ragged M/N/K: K values that
+    leave a ragged final word AND a ragged final K-block (block_kw=4
+    words, so k > 4 * vpw exercises the zero-padded block tail)."""
+    cfg = QuantConfig(bits=bits)
+    rng = np.random.default_rng(seed)
+    x = jnp.asarray(rng.normal(size=(m, k)), jnp.float32)
+    w = jnp.asarray(rng.normal(size=(k, n)), jnp.float32)
+    packed, scale = pack_weights(w, cfg)
+    want = ref.samd_matmul_ref(x, packed, scale, k, cfg)
+    got = _mm.samd_matmul_xla(x, packed, scale, k, cfg, block_kw=4)
+    _assert_close(got, want, (bits, m, k, n, "xla"))
+
+
+@settings(max_examples=12, deadline=None)
+@given(
+    bits=st.sampled_from([2, 4, 8]),
+    m=st.integers(1, 9),
+    k=st.integers(1, 70),
+    n=st.integers(1, 20),
+    seed=st.integers(0, 2**16),
+)
+def test_matmul_pallas_interpreter_matches_ref(bits, m, k, n, seed):
+    """The actual kernel body (Pallas interpreter) with tiny blocks so
+    ragged M/N/K all spill across grid-step boundaries."""
+    cfg = QuantConfig(bits=bits)
+    rng = np.random.default_rng(seed)
+    x = jnp.asarray(rng.normal(size=(m, k)), jnp.float32)
+    w = jnp.asarray(rng.normal(size=(k, n)), jnp.float32)
+    packed, scale = pack_weights(w, cfg)
+    want = ref.samd_matmul_ref(x, packed, scale, k, cfg)
+    got = _mm.samd_matmul(x, packed, scale, k, cfg, block_m=4, block_n=8,
+                          block_kw=2, interpret=True)
+    _assert_close(got, want, (bits, m, k, n, "interpret"))
+
+
+@pytest.mark.parametrize("lowering", ["xla", "interpret"])
+@pytest.mark.parametrize("bits", [2, 4, 8])
+def test_matmul_unsigned_lanes(bits, lowering):
+    """signed=False fast path: unsigned codes (no sign bit in the lane)
+    must skip the sign correction and still match the integer oracle."""
+    cfg = QuantConfig(bits=bits)
+    rng = np.random.default_rng(bits)
+    k, n, m = 37, 11, 5
+    q = rng.integers(0, 1 << bits, size=(k, n))
+    fmt = samd.SAMDFormat(bits, cfg.lane_width, signed=False)
+    packed = jnp.moveaxis(samd.pack(jnp.asarray(q.T, jnp.int32), fmt),
+                          -1, 0)
+    scale = jnp.asarray(rng.uniform(0.5, 2.0, size=(1, n)), jnp.float32)
+    x = jnp.asarray(rng.normal(size=(m, k)), jnp.float32)
+    want = x @ (jnp.asarray(q, jnp.float32) * scale)
+    if lowering == "xla":
+        got = _mm.samd_matmul_xla(x, packed, scale, k, cfg, block_kw=4,
+                                  signed=False)
+    else:
+        got = _mm.samd_matmul(x, packed, scale, k, cfg, block_m=4,
+                              block_n=8, block_kw=2, signed=False,
+                              interpret=True)
+    _assert_close(got, want, (bits, lowering, "unsigned"))
+
+
+def test_matmul_ragged_k_blocks_regression():
+    """The PR 2 regression class on the new defaults: K extents that are
+    NOT multiples of values_per_word * block_kw must zero-pad, never
+    read undefined words into the accumulator."""
+    rng = np.random.default_rng(0)
+    for bits, k in [(2, 129 * 16 + 5), (4, 129 * 8 + 3), (8, 129 * 4 + 1)]:
+        cfg = QuantConfig(bits=bits)
+        x = jnp.asarray(rng.normal(size=(3, k)), jnp.float32)
+        w = jnp.asarray(rng.normal(size=(k, 17)), jnp.float32)
+        packed, scale = pack_weights(w, cfg)
+        want = ref.samd_matmul_ref(x, packed, scale, k, cfg)
+        got = ops.samd_matmul(x, packed, scale, k, cfg)  # default dispatch
+        _assert_close(got, want, (bits, k, "ragged-k"))
+
+
+# ---------------------------------------------------------------------------
+# conv2d
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=20, deadline=None)
+@given(
+    bits=st.sampled_from([2, 4, 8]),
+    c_in=st.integers(1, 40),
+    c_out=st.integers(1, 20),
+    h=st.integers(3, 12),
+    w=st.integers(3, 12),
+    padding=st.sampled_from([0, 1]),
+    seed=st.integers(0, 2**16),
+)
+def test_conv2d_xla_lowering_matches_ref(bits, c_in, c_out, h, w, padding,
+                                         seed):
+    """CPU lowering vs dense-dequant lax.conv across ragged channel
+    counts (C_in not a multiple of values_per_word, forcing both a
+    ragged final word and — with block_cw=2 — a ragged word-block)."""
+    cfg = QuantConfig(bits=bits)
+    rng = np.random.default_rng(seed)
+    x = jnp.asarray(rng.normal(size=(c_in, h, w)), jnp.float32)
+    wt = jnp.asarray(rng.normal(size=(3, 3, c_in, c_out)), jnp.float32)
+    packed, scale = pack_conv_weights(wt, cfg)
+    want = ref.samd_conv2d_ref(x, packed, scale, cfg, padding=padding)
+    got = _cv.samd_conv2d_xla(x, packed, scale, cfg, padding=padding,
+                              block_cw=2)
+    _assert_close(got, want, (bits, c_in, c_out, h, w, padding, "xla"))
+
+
+@settings(max_examples=10, deadline=None)
+@given(
+    bits=st.sampled_from([2, 4, 8]),
+    c_in=st.integers(1, 18),
+    c_out=st.integers(1, 9),
+    h=st.integers(3, 7),
+    w=st.integers(3, 7),
+    seed=st.integers(0, 2**16),
+)
+def test_conv2d_pallas_interpreter_matches_ref(bits, c_in, c_out, h, w,
+                                               seed):
+    """The fused-im2col kernel body itself (Pallas interpreter, tiny
+    blocks): per-kh row aliasing, static kw slices, online accumulation
+    across channel-block grid steps."""
+    cfg = QuantConfig(bits=bits)
+    rng = np.random.default_rng(seed)
+    x = jnp.asarray(rng.normal(size=(c_in, h, w)), jnp.float32)
+    wt = jnp.asarray(rng.normal(size=(3, 3, c_in, c_out)), jnp.float32)
+    packed, scale = pack_conv_weights(wt, cfg)
+    want = ref.samd_conv2d_ref(x, packed, scale, cfg, padding=1)
+    got = _cv.samd_conv2d(x, packed, scale, cfg, padding=1, block_cw=2,
+                          block_n=4, interpret=True)
+    _assert_close(got, want, (bits, c_in, c_out, h, w, "interpret"))
+
+
+@pytest.mark.parametrize("bits", [2, 4, 8])
+def test_conv2d_unsigned_lanes(bits):
+    """Unsigned conv codes through both lowerings' signed=False path."""
+    cfg = QuantConfig(bits=bits)
+    rng = np.random.default_rng(bits)
+    c_in, c_out, h, w = 9, 6, 5, 5
+    q = rng.integers(0, 1 << bits, size=(3, 3, c_in, c_out))
+    fmt = samd.SAMDFormat(bits, cfg.lane_width, signed=False)
+    packed = jnp.moveaxis(
+        samd.pack(jnp.asarray(np.moveaxis(q, 2, -1), jnp.int32), fmt),
+        -1, 2,
+    )
+    scale = jnp.asarray(rng.uniform(0.5, 2.0, size=(1, c_out)), jnp.float32)
+    x = jnp.asarray(rng.normal(size=(c_in, h, w)), jnp.float32)
+    import jax
+
+    want = jax.lax.conv_general_dilated(
+        x[None], jnp.asarray(q, jnp.float32) * scale.reshape(1, 1, 1, -1),
+        window_strides=(1, 1), padding=[(1, 1), (1, 1)],
+        dimension_numbers=("NCHW", "HWIO", "NHWC"),
+    )[0]
+    for tag, got in [
+        ("xla", _cv.samd_conv2d_xla(x, packed, scale, cfg, padding=1,
+                                    block_cw=2, signed=False)),
+        ("interpret", _cv.samd_conv2d(x, packed, scale, cfg, padding=1,
+                                      block_cw=2, block_n=4, signed=False,
+                                      interpret=True)),
+    ]:
+        _assert_close(got, want, (bits, tag, "unsigned"))
+
+
+# ---------------------------------------------------------------------------
+# satellite regression: automatic signed-product correction
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("bits", [2, 4, 7])
+def test_unpack_signed_product_bakes_in_borrow_fixup(bits):
+    """The documented wide-lane footgun: after sign_extend_for_mul a
+    signed word read back with unpack_lanes_wide ALONE is off by one in
+    every lane above a negative lane (the Fig. 12 borrow).
+    ``unpack_signed_product`` must repair it automatically."""
+    fmt = samd.scale_format(bits, signed=True)
+    lo, hi = -(1 << (bits - 1)), (1 << (bits - 1)) - 1
+    # force the borrow: a negative lane below a non-negative lane
+    vals = np.array([lo, hi, lo, 0], dtype=np.int64)[: fmt.lanes_per_word]
+    packed = samd.pack(jnp.asarray(vals, jnp.int32),
+                       samd.SAMDFormat(bits, fmt.lane_width, True))
+    word = samd.sign_extend_for_mul(
+        packed, samd.SAMDFormat(bits, fmt.lane_width, True)
+    )
+    n = len(vals)
+    raw = np.asarray(samd.unpack_lanes_wide(word, fmt, n))
+    fixed = np.asarray(samd.unpack_signed_product(word, fmt, n))
+    np.testing.assert_array_equal(fixed, vals)
+    # the raw read really is wrong above the negative lanes — the reason
+    # the automatic fixup exists
+    assert (raw != vals).any()
+
+
+def test_unpack_signed_product_noop_for_unsigned():
+    fmt = samd.scale_format(3, signed=False)
+    vals = np.array([7, 0, 5, 1], dtype=np.int64)[: fmt.lanes_per_word]
+    word = samd.pack(jnp.asarray(vals, jnp.int32),
+                     samd.SAMDFormat(3, fmt.lane_width, False))
+    out = np.asarray(samd.unpack_signed_product(word, fmt, len(vals)))
+    np.testing.assert_array_equal(out, vals)

@@ -39,6 +39,36 @@ def test_gate_end_to_end(tmp_path):
                  "--current", str(cur)]) == 0
 
 
+def test_lower_is_better_flips_the_regression_direction():
+    base = {"vggb/x/blocked2": 100.0, "vggb/x/blocked4": 100.0}
+    cur = {"vggb/x/blocked2": 115.0, "vggb/x/blocked4": 125.0}
+    # higher-is-better would call a latency INCREASE an improvement
+    _, regressions = compare(base, cur, threshold=0.20)
+    assert regressions == []
+    # lower-is-better: +15% passes the 20% gate, +25% fails it
+    _, regressions = compare(base, cur, threshold=0.20,
+                             lower_is_better=True)
+    assert [r[0] for r in regressions] == ["vggb/x/blocked4"]
+    # and a latency DROP is never a regression in this mode
+    _, regressions = compare(base, {"vggb/x/blocked2": 10.0,
+                                    "vggb/x/blocked4": 10.0},
+                             threshold=0.20, lower_is_better=True)
+    assert regressions == []
+
+
+def test_lower_is_better_end_to_end(tmp_path):
+    def write(path, rows):
+        path.write_text(json.dumps({"table": "vggb", "rows": rows}))
+
+    base, cur = tmp_path / "base.json", tmp_path / "cur.json"
+    write(base, [{"name": "vggb/x/blocked2", "us": 100.0}])
+    write(cur, [{"name": "vggb/x/blocked2", "us": 130.0}])
+    args = ["--baseline", str(base), "--current", str(cur),
+            "--metric", "us"]
+    assert main(args) == 0          # higher-is-better misreads the +30%
+    assert main(args + ["--lower-is-better"]) == 1
+
+
 def test_markdown_report_covers_every_row_class():
     base = {"serving/a": 100.0, "serving/gone": 10.0,
             "serving/per_row_x": 5.0}
