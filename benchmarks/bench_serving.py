@@ -55,7 +55,8 @@ is what the perf gate diffs. Every ragged variant gets one UNTIMED
 warmup pass over the actual measured workload before its first timed
 round (bucket warming alone left first-touch costs in round 0 — the
 source of the ~4.5x run-to-run spread in earlier committed artifacts);
-the cost is recorded as ``warmup_seconds`` in each row. ``--check-parity`` additionally ASSERTS
+the cost is recorded as ``warmup_seconds`` in each row.
+``--check-parity`` additionally ASSERTS
 ``serving/paged_fused_bf16`` >= 95% of ring throughput AND
 ``serving/spec_k2_bf16`` >= 1.0x ``serving/paged_fused_bf16`` (the
 ratios are always printed); CI enables it on the HEAD benchmark only,
@@ -83,6 +84,40 @@ import time
 import numpy as np
 
 from benchmarks.jsonio import write_bench_json
+
+
+# (row suffix, engine kwargs + optional weight bits / kv bits); fused is
+# the engine default, gather rows pin the PR 2 reference backend. Module
+# level so repro.analysis.certify can map BENCH_serving.json row names
+# ("serving/<suffix>") back to the quantization each row actually served.
+SERVING_VARIANTS = [
+    ("per_row_bf16", dict(decode_mode="per_row", kv_mode="auto")),
+    ("paged_fused_bf16", dict(kv_mode="paged")),
+    ("paged_bf16", dict(kv_mode="paged", paged_attn="gather")),
+    ("ragged_ring_bf16", dict(kv_mode="ring")),
+    ("paged_fused_b4", dict(kv_mode="paged", bits=4)),
+    ("paged_b4", dict(kv_mode="paged", paged_attn="gather", bits=4)),
+    # self-speculative rows: 8-bit SAMD draft, bf16 target (greedy —
+    # token-identical to paged_fused_bf16, just more tokens per
+    # tick). Served as a BURST (decode-bound): the mixed-arrival
+    # pattern admits one request per 2 TICKS, which would throttle
+    # an engine precisely for needing fewer ticks. The burst row of
+    # the PLAIN fused engine is measured too, so the parity gate has
+    # a like-for-like baseline in the same serving regime.
+    ("paged_fused_burst_bf16", dict(kv_mode="paged", burst=True)),
+    (
+        "spec_k2_bf16",
+        dict(kv_mode="paged", speculative=2, draft_bits=8, burst=True),
+    ),
+    (
+        "spec_k4_bf16",
+        dict(kv_mode="paged", speculative=4, draft_bits=8, burst=True),
+    ),
+]
+FULL_ONLY_VARIANTS = [
+    ("paged_b8", dict(kv_mode="paged", paged_attn="gather", bits=8)),
+    ("paged_fused_int8kv", dict(kv_mode="paged", bits=8, kv_bits=8)),
+]
 
 
 def _cfg():
@@ -202,8 +237,9 @@ def paged_memory_check(cfg, max_batch: int = 4, max_len: int = 96,
     dt = time.perf_counter() - t0
     done = eng.finished
     assert len(done) == len(reqs), "paged pool must serve every request"
-    assert not any(r.truncated for r in done), \
-        "half-size pool must not need OOP truncation for this workload"
+    assert not any(
+        r.truncated for r in done
+    ), "half-size pool must not need OOP truncation for this workload"
     assert not any(r.error for r in done)
     assert paged_bytes < ring_bytes, (paged_bytes, ring_bytes)
 
@@ -293,8 +329,9 @@ def shared_prefix_check(cfg, max_batch: int = 4, max_len: int = 96,
     tok_s, dt_s, warm_s, out_s = serve(share)
     tok_n, dt_n, warm_n, out_n = serve(noshare)
     _, _, _, out_r = serve(ring)
-    assert out_s == out_n == out_r, \
-        "prefix sharing must stay token-identical to the ring"
+    assert (
+        out_s == out_n == out_r
+    ), "prefix sharing must stay token-identical to the ring"
     assert share.stats["prefix_hits"] > 0
 
     peak_s = share.stats["peak_pages_used"]
@@ -351,35 +388,9 @@ def run(quick: bool = True, max_batch: int = 4, max_len: int = 96,
     # enough decode work that each timed region is O(seconds): at ~1k tok/s
     # a 6-request burst measures ~0.05s — pure scheduler/OS noise
     n_requests = 24 if quick else 64
-    # (row suffix, engine kwargs + optional weight bits / kv bits); fused
-    # is the engine default, gather rows pin the PR 2 reference backend
-    variants = [
-        ("per_row_bf16", dict(decode_mode="per_row", kv_mode="auto")),
-        ("paged_fused_bf16", dict(kv_mode="paged")),
-        ("paged_bf16", dict(kv_mode="paged", paged_attn="gather")),
-        ("ragged_ring_bf16", dict(kv_mode="ring")),
-        ("paged_fused_b4", dict(kv_mode="paged", bits=4)),
-        ("paged_b4", dict(kv_mode="paged", paged_attn="gather", bits=4)),
-        # self-speculative rows: 8-bit SAMD draft, bf16 target (greedy —
-        # token-identical to paged_fused_bf16, just more tokens per
-        # tick). Served as a BURST (decode-bound): the mixed-arrival
-        # pattern admits one request per 2 TICKS, which would throttle
-        # an engine precisely for needing fewer ticks. The burst row of
-        # the PLAIN fused engine is measured too, so the parity gate has
-        # a like-for-like baseline in the same serving regime.
-        ("paged_fused_burst_bf16", dict(kv_mode="paged", burst=True)),
-        ("spec_k2_bf16", dict(kv_mode="paged", speculative=2,
-                              draft_bits=8, burst=True)),
-        ("spec_k4_bf16", dict(kv_mode="paged", speculative=4,
-                              draft_bits=8, burst=True)),
-    ]
+    variants = list(SERVING_VARIANTS)
     if not quick:
-        variants += [
-            ("paged_b8", dict(kv_mode="paged", paged_attn="gather",
-                              bits=8)),
-            ("paged_fused_int8kv", dict(kv_mode="paged", bits=8,
-                                        kv_bits=8)),
-        ]
+        variants += FULL_ONLY_VARIANTS
 
     # Build + warm every engine first, then INTERLEAVE the timed rounds
     # (round 0 of every variant, then round 1, ...): a slow host phase —

@@ -310,8 +310,11 @@ def op_count_model(bit_list=(8, 6, 4, 3, 2), word_bits=64):
     wide = WIDE_MUL_NATIVE if word_bits == 64 else WIDE_MUL_TPU32
     for bits in bit_list:
         for regime in ("temporary", "permanent"):
-            lane = conv_lane_width(bits, taps, True) \
-                if bits * 2 + 2 <= word_bits // taps else None
+            lane = (
+                conv_lane_width(bits, taps, True)
+                if bits * 2 + 2 <= word_bits // taps
+                else None
+            )
             fixup = FIXUP_PERM if regime == "permanent" else FIXUP_TEMP
             if lane is not None and taps * lane <= word_bits:
                 vals = word_bits // lane

@@ -38,6 +38,23 @@ CW_LADDER = (16, 32, 64, 128)
 BN_LADDER = (128, 256, 512)   # TPU-only (the jnp lowerings have no N block)
 
 
+def _static_reject(check, vmem=None):
+    """Lane-safety gate run before a ladder cell is ever timed: returns
+    a rejection reason, or None when the cell is statically safe. The
+    autotuner can therefore never recommend a configuration the checker
+    (repro.analysis) would refuse at trace time."""
+    from repro.analysis import contracts
+
+    verdict = check()
+    if not verdict.ok:
+        return f"{verdict.status}: {verdict.detail}"
+    if vmem is not None:
+        est, limit = vmem(), contracts.vmem_limit("tpu")
+        if est > limit:
+            return f"vmem-budget: {est} bytes > {limit} (tpu)"
+    return None
+
+
 def _time(fn, *args, repeats=3):
     jax.block_until_ready(fn(*args))
     runs = []
@@ -58,6 +75,8 @@ def matmul_variants(m, k, n, bits, repeats, on_tpu):
     x = jnp.asarray(rng.normal(size=(m, k)), jnp.float32)
     w = jnp.asarray(rng.normal(size=(k, n)), jnp.float32)
     packed, scale = pack_weights(w, cfg)
+    from repro.analysis import contracts
+
     for bkw in KW_LADDER:
         bns = BN_LADDER if on_tpu else (None,)
         for bn in bns:
@@ -66,11 +85,21 @@ def matmul_variants(m, k, n, bits, repeats, on_tpu):
                     return mm.samd_matmul(x, p, s, k, cfg, block_kw=bkw,
                                           block_n=bn)
                 params = {"block_kw": bkw, "block_n": bn}
+                vmem = lambda bkw=bkw, bn=bn: contracts.matmul_vmem_bytes(
+                    cfg, block_m=min(128, m), block_n=bn, block_kw=bkw
+                )
             else:
                 def f(x, p, s, bkw=bkw):
                     return mm.samd_matmul_xla(x, p, s, k, cfg,
                                               block_kw=bkw)
                 params = {"block_kw": bkw}
+                vmem = None
+            reason = _static_reject(
+                lambda: contracts.check_matmul_config(cfg, k), vmem
+            )
+            if reason is not None:
+                yield params, None, reason
+                continue
             us, runs = _time(f, x, packed, scale, repeats=repeats)
             yield params, us, runs
 
@@ -85,6 +114,8 @@ def conv_variants(c_in, c_out, h, w, bits, repeats, on_tpu):
     x = jnp.asarray(rng.normal(size=(c_in, h, w)), jnp.float32)
     wt = jnp.asarray(rng.normal(size=(3, 3, c_in, c_out)), jnp.float32)
     packed, scale = pack_conv_weights(wt, cfg)
+    from repro.analysis import contracts
+
     for bcw in CW_LADDER:
         bns = BN_LADDER if on_tpu else (None,)
         for bn in bns:
@@ -93,10 +124,21 @@ def conv_variants(c_in, c_out, h, w, bits, repeats, on_tpu):
                     return cv.samd_conv2d(x, p, s, cfg, block_cw=bcw,
                                           block_n=bn)
                 params = {"block_cw": bcw, "block_n": bn}
+                vmem = lambda bcw=bcw, bn=bn: contracts.conv2d_vmem_bytes(
+                    cfg, w_img=w, block_cw=bcw, block_n=bn
+                )
             else:
                 def f(x, p, s, bcw=bcw):
                     return cv.samd_conv2d_xla(x, p, s, cfg, block_cw=bcw)
                 params = {"block_cw": bcw}
+                vmem = None
+            reason = _static_reject(
+                lambda: contracts.check_conv2d_config(cfg, 3, 3, c_in),
+                vmem,
+            )
+            if reason is not None:
+                yield params, None, reason
+                continue
             us, runs = _time(f, x, packed, scale, repeats=repeats)
             yield params, us, runs
 
@@ -135,12 +177,21 @@ def main(out="artifacts/hillclimb.jsonl"):
                 for cell, variants in cells:
                     best = None
                     for params, us, runs in variants:
+                        if us is None:  # statically rejected, never timed
+                            rec = {"cell": cell, "lowering": lowering,
+                                   "params": params, "rejected": runs}
+                            fh.write(json.dumps(rec) + "\n")
+                            print(f"{cell} {params}: REJECTED ({runs})")
+                            continue
                         rec = {"cell": cell, "lowering": lowering,
                                "params": params, "us": us, "runs_us": runs}
                         fh.write(json.dumps(rec) + "\n")
                         print(f"{cell} {params}: {us:.0f}us")
                         if best is None or us < best[1]:
                             best = (params, us)
+                    if best is None:
+                        print(f"{cell}: every variant statically rejected")
+                        continue
                     winners.append((cell, *best))
                     jax.clear_caches()
     print("\n# winners")

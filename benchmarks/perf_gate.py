@@ -184,8 +184,9 @@ def main(argv=None) -> int:
     current = load_rows(args.current, args.metric)
     lines, regressions = compare(baseline, current, args.threshold, exclude,
                                  args.lower_is_better)
-    direction = "lower is better" if args.lower_is_better \
-        else "higher is better"
+    direction = (
+        "lower is better" if args.lower_is_better else "higher is better"
+    )
     print(f"perf_gate: {args.metric} ({direction}), "
           f"threshold {args.threshold:.0%}")
     print("\n".join(lines))

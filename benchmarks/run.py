@@ -100,8 +100,8 @@ def main() -> None:
     if args.full:
         layers, bits = None, (8, 6, 4, 3, 2)
     else:
-        layers, bits = [VGGB_LAYERS[0], VGGB_LAYERS[4], VGGB_LAYERS[8]], \
-            (8, 4, 2)
+        layers = [VGGB_LAYERS[0], VGGB_LAYERS[4], VGGB_LAYERS[8]]
+        bits = (8, 4, 2)
 
     vggb_json_rows = bench_vggb.run(layers=layers, bit_list=bits,
                                     quick=not args.full)

@@ -1,0 +1,78 @@
+"""Static lane-safety analysis for SAMD programs (the verifier).
+
+Two layers:
+
+* :mod:`repro.analysis.lanes` — the bit-width abstract interpreter: exact
+  per-lane integer intervals propagated through pack -> multiply ->
+  accumulate -> shift -> unpack, emitting a machine-readable
+  :class:`~repro.analysis.lanes.Verdict` (``safe`` /
+  ``needs-spacer-bits`` / ``borrow-fixup-missing``) for any
+  (SAMDFormat, accumulation depth, signedness) tuple.
+* :mod:`repro.analysis.contracts` — kernel/layout contracts built on the
+  interpreter: checks for the blocked matmul/conv storage formats, the
+  packed-domain ConvPlan pipeline, VMEM block-budget estimates, and the
+  repo-wide certification sweep (see :mod:`repro.analysis.certify`).
+
+``kernels/ops.py`` runs these checks at trace time (``verify=True``),
+``serving/engine.py`` validates draft/target quantization at admission,
+``benchmarks/hillclimb.py`` rejects statically-unsafe ladder cells, and
+``tools/samd_lint.py`` drives the same contracts from CI.
+"""
+
+from repro.analysis.lanes import (
+    SAFE,
+    NEEDS_SPACER,
+    BORROW_MISSING,
+    LaneSafetyError,
+    Verdict,
+    Pack,
+    SignExtend,
+    MulKernel,
+    Accumulate,
+    ShiftRight,
+    BorrowFixup,
+    ReadWide,
+    ReadValue,
+    interpret,
+    accumulation_program,
+    check_accumulation,
+)
+from repro.analysis.contracts import (
+    assert_safe,
+    check_matmul_config,
+    check_conv2d_config,
+    check_conv_plan,
+    matmul_vmem_bytes,
+    conv2d_vmem_bytes,
+    model_reduction_depths,
+    packed_reduction_depths,
+    VMEM_LIMIT_BYTES,
+)
+
+__all__ = [
+    "SAFE",
+    "NEEDS_SPACER",
+    "BORROW_MISSING",
+    "LaneSafetyError",
+    "Verdict",
+    "Pack",
+    "SignExtend",
+    "MulKernel",
+    "Accumulate",
+    "ShiftRight",
+    "BorrowFixup",
+    "ReadWide",
+    "ReadValue",
+    "interpret",
+    "accumulation_program",
+    "check_accumulation",
+    "assert_safe",
+    "check_matmul_config",
+    "check_conv2d_config",
+    "check_conv_plan",
+    "matmul_vmem_bytes",
+    "conv2d_vmem_bytes",
+    "model_reduction_depths",
+    "packed_reduction_depths",
+    "VMEM_LIMIT_BYTES",
+]

@@ -1,0 +1,155 @@
+"""Repo-wide lane-safety certification sweep (CI: the ``samd-lint`` job).
+
+Certifies every configuration the repo actually ships:
+
+* the paper's VGG-B evaluation grid — ``bits`` in {2, 4, 8} x
+  signed/unsigned x every reduction depth in ``configs/vggb.py``
+  (3x3 kernels, so K = 9 * C_in per layer), through both the blocked
+  ``samd_conv2d``/``samd_matmul`` storage contracts and, where a 3-tap
+  packed-domain plan fits a 32-bit word, the full ConvPlan pipeline
+  at the paper's ``conv_lane_width``;
+* the serving rows in ``BENCH_serving.json`` — each row name is mapped
+  back through ``benchmarks.bench_serving.SERVING_VARIANTS`` to the
+  weight / draft / KV quantization it served, and every resulting
+  QuantConfig is checked against the bench model's actual reduction
+  depths (``model_reduction_depths`` over its TensorSpec template).
+
+Exit status 0 iff every verdict is ``safe``. ``--json`` dumps the full
+verdict list (machine-readable; one object per certified tuple).
+
+Run:  PYTHONPATH=src python -m repro.analysis.certify [--json] \
+          [--bench BENCH_serving.json]
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+from pathlib import Path
+
+from repro.analysis import contracts
+from repro.analysis.lanes import Verdict
+from repro.configs.vggb import VGGB_LAYERS
+from repro.core.conv import ConvPlan
+from repro.core.samd import SAMDFormat, conv_lane_width
+from repro.quant.config import QuantConfig
+
+BITS_SWEEP = (2, 4, 8)
+CONV_TAPS = 3  # the paper's 3x3 kernels, row-major: 3 taps per word
+
+
+def _entry(name: str, verdict: Verdict) -> dict:
+    d = verdict.to_dict()
+    d["config"] = name
+    return d
+
+
+def certify_vggb() -> list[dict]:
+    """bits x signedness x VGG-B reduction depths (tentpole acceptance
+    grid), plus the packed-domain ConvPlan certs per format."""
+    out = []
+    depths = sorted({9 * c_in for _, c_in, *_ in VGGB_LAYERS})
+    for bits in BITS_SWEEP:
+        cfg = QuantConfig(bits=bits)
+        for signed in (True, False):
+            sig = "s" if signed else "u"
+            for _, c_in, *_ in sorted(
+                {(n, c) for n, c, *_ in VGGB_LAYERS}
+            ):
+                v = contracts.check_conv2d_config(
+                    cfg, 3, 3, c_in, signed=signed
+                )
+                out.append(_entry(f"vggb/conv2d_b{bits}{sig}_cin{c_in}", v))
+            for k in depths:
+                v = contracts.check_matmul_config(cfg, k, signed=signed)
+                out.append(_entry(f"vggb/matmul_b{bits}{sig}_k{k}", v))
+            # packed-domain: paper Fig. 14 loop, lane width from Table 2
+            lane = conv_lane_width(bits, CONV_TAPS, signed)
+            if CONV_TAPS * lane <= 32:
+                plan = ConvPlan(SAMDFormat(bits, lane, signed), CONV_TAPS)
+                v = contracts.check_conv_plan(plan)
+                out.append(_entry(f"vggb/convplan_b{bits}{sig}", v))
+    return out
+
+
+def _serving_variant_table() -> dict[str, dict]:
+    from benchmarks.bench_serving import (
+        FULL_ONLY_VARIANTS,
+        SERVING_VARIANTS,
+    )
+
+    return dict(SERVING_VARIANTS) | dict(FULL_ONLY_VARIANTS)
+
+
+def certify_serving(bench_path: Path) -> list[dict]:
+    """Every quantized row in BENCH_serving.json against the bench
+    model's actual reduction depths."""
+    from benchmarks.bench_serving import _cfg
+    from repro.models.model import build_template
+
+    rows = json.load(open(bench_path))["rows"]
+    table = _serving_variant_table()
+    depths = contracts.model_reduction_depths(build_template(_cfg()))
+    out = []
+    for row in rows:
+        suffix = row["name"].split("/", 1)[-1]
+        spec = table.get(suffix)
+        if spec is None:
+            continue  # acceptance-check rows (prefix share etc.): bf16
+        configs = []
+        if spec.get("bits"):
+            configs.append(("weights", QuantConfig(bits=spec["bits"])))
+        if spec.get("draft_bits"):
+            configs.append(
+                (
+                    "draft",
+                    QuantConfig(bits=spec["draft_bits"], backend="pallas"),
+                )
+            )
+        for role, cfg in configs:
+            for k in depths:
+                v = contracts.check_matmul_config(cfg, k)
+                out.append(_entry(f"serving/{suffix}/{role}_k{k}", v))
+    return out
+
+
+def run(bench_path: Path) -> tuple[list[dict], int]:
+    entries = certify_vggb()
+    if bench_path.exists():
+        entries += certify_serving(bench_path)
+    else:
+        print(f"certify: {bench_path} missing, serving sweep skipped",
+              file=sys.stderr)
+    failures = sum(1 for e in entries if e["status"] != "safe")
+    return entries, failures
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument(
+        "--bench",
+        type=Path,
+        default=Path("BENCH_serving.json"),
+        help="serving benchmark artifact to map rows from",
+    )
+    ap.add_argument("--json", action="store_true", help="dump verdicts")
+    args = ap.parse_args(argv)
+
+    entries, failures = run(args.bench)
+    if args.json:
+        json.dump(entries, sys.stdout, indent=1)
+        print()
+    else:
+        for e in entries:
+            if e["status"] != "safe":
+                print(f"UNSAFE {e['config']}: {e['detail']}")
+        print(
+            f"certify: {len(entries)} configurations checked, "
+            f"{failures} unsafe"
+        )
+    return 1 if failures else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

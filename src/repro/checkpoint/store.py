@@ -50,7 +50,9 @@ def _flatten_with_names(tree):
     return out
 
 
-def save_checkpoint(path: str, tree: Any, *, step: int, meta: dict | None = None):
+def save_checkpoint(
+    path: str, tree: Any, *, step: int, meta: dict | None = None
+):
     """Synchronous atomic checkpoint write (tmp dir + rename)."""
     tmp = path + ".tmp"
     if os.path.exists(tmp):

@@ -72,7 +72,7 @@ class ArchConfig:
 class ShapeConfig:
     """One assigned input-shape cell."""
 
-    name: str              # 'train_4k' | 'prefill_32k' | 'decode_32k' | 'long_500k'
+    name: str  # 'train_4k' | 'prefill_32k' | 'decode_32k' | 'long_500k'
     seq_len: int
     global_batch: int
     kind: str              # 'train' | 'prefill' | 'decode'

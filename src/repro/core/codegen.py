@@ -52,7 +52,9 @@ class OpCounts:
         )
 
     def scaled(self, k: int) -> "OpCounts":
-        return OpCounts(self.bitwise * k, self.addsub * k, self.mul * k, self.shift * k)
+        return OpCounts(
+            self.bitwise * k, self.addsub * k, self.mul * k, self.shift * k
+        )
 
 
 # op-count models for the primitive SAMD sequences (constants folded)

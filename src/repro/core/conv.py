@@ -67,7 +67,8 @@ class ConvPlan:
                 f"does not fit a {self.fmt.word_bits}-bit word; use "
                 f"conv_by_scale (vector-scale fallback) for wide formats"
             )
-        if self.out_lanes_per_chunk * self.fmt.lane_width > 2 * self.fmt.word_bits:
+        wide = self.out_lanes_per_chunk * self.fmt.lane_width
+        if wide > 2 * self.fmt.word_bits:
             raise ValueError("product lanes exceed double-width result")
 
 
@@ -218,7 +219,9 @@ def overlap_add(ext: jax.Array, plan: ConvPlan, n_out: int) -> jax.Array:
     return out[..., :n_out]
 
 
-def samd_conv_full(x: jax.Array, kernel: jax.Array, plan: ConvPlan) -> jax.Array:
+def samd_conv_full(
+    x: jax.Array, kernel: jax.Array, plan: ConvPlan
+) -> jax.Array:
     """Full 1D convolution (== polynomial product, ``np.convolve(x, k)``)
     of integer sequences, computed with one widening multiply per
     ``lanes_per_chunk`` input values.
@@ -233,7 +236,9 @@ def samd_conv_full(x: jax.Array, kernel: jax.Array, plan: ConvPlan) -> jax.Array
     return overlap_add(ext, plan, n + plan.taps - 1)
 
 
-def samd_correlate_valid(x: jax.Array, kernel: jax.Array, plan: ConvPlan) -> jax.Array:
+def samd_correlate_valid(
+    x: jax.Array, kernel: jax.Array, plan: ConvPlan
+) -> jax.Array:
     """CNN-style 'valid' correlation: out[i] = sum_j k[j] * x[i+j]."""
     full = samd_conv_full(x, kernel[..., ::-1], plan)
     taps = plan.taps

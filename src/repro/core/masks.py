@@ -10,14 +10,18 @@ from functools import lru_cache
 
 
 @lru_cache(maxsize=None)
-def build_mask(start: int, width: int, stride: int, word_bits: int = 32) -> int:
+def build_mask(
+    start: int, width: int, stride: int, word_bits: int = 32
+) -> int:
     """Lay a run of ``width`` ones at every ``stride`` bits, from ``start``.
 
     Mirrors the paper's ``build_mask`` (Fig. 3), returning a Python int so it
     can be baked into jitted code as a constant.
     """
     if width <= 0 or stride <= 0:
-        raise ValueError(f"width/stride must be positive, got {width}/{stride}")
+        raise ValueError(
+            f"width/stride must be positive, got {width}/{stride}"
+        )
     sub_mask = (1 << width) - 1
     mask = 0
     for i in range(start, word_bits, stride):

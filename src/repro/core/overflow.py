@@ -37,6 +37,19 @@ def input_range(input_bits: int, input_signed: bool) -> tuple[int, int]:
     return 0, (1 << input_bits) - 1
 
 
+def dot_range(
+    kernel: np.ndarray, in_lo: int, in_hi: int
+) -> tuple[int, int]:
+    """Exact worst-case [min, max] of sum_j k_j * x_j for constant taps
+    ``kernel`` against inputs ranging over [in_lo, in_hi] — the §7
+    positive/negative tap-sum split, generalized to any input interval
+    (the lane abstract interpreter feeds it intermediate intervals)."""
+    k = np.asarray(kernel, dtype=np.int64)
+    pos = int(k[k > 0].sum()) if (k > 0).any() else 0
+    neg = int(k[k < 0].sum()) if (k < 0).any() else 0
+    return pos * in_lo + neg * in_hi, pos * in_hi + neg * in_lo
+
+
 def conv_output_range(
     kernel: np.ndarray, input_bits: int, input_signed: bool
 ) -> tuple[int, int]:
@@ -45,13 +58,8 @@ def conv_output_range(
     ``kernel`` may be any shape; all elements are assumed to contribute to a
     single accumulator (e.g. [C, KH, KW] for a full CNN conv output point).
     """
-    k = np.asarray(kernel, dtype=np.int64)
     in_min, in_max = input_range(input_bits, input_signed)
-    pos = int(k[k > 0].sum()) if (k > 0).any() else 0
-    neg = int(k[k < 0].sum()) if (k < 0).any() else 0
-    out_max = pos * in_max + neg * in_min
-    out_min = pos * in_min + neg * in_max
-    return out_min, out_max
+    return dot_range(kernel, in_min, in_max)
 
 
 def conv_output_bits(

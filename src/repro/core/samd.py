@@ -83,7 +83,9 @@ class SAMDFormat:
     @property
     def value_msb_mask(self) -> int:
         """MSB of the *value* portion (sign bit position) of each lane."""
-        return masks.build_mask(self.bits - 1, 1, self.lane_width, self.word_bits)
+        return masks.build_mask(
+            self.bits - 1, 1, self.lane_width, self.word_bits
+        )
 
     @property
     def value_bits_mask(self) -> int:
@@ -97,17 +99,23 @@ class SAMDFormat:
         return jnp.asarray(v & masks.full_mask(self.word_bits), self.dtype)
 
 
-def dense_format(bits: int, signed: bool = True, word_bits: int = 32) -> SAMDFormat:
+def dense_format(
+    bits: int, signed: bool = True, word_bits: int = 32
+) -> SAMDFormat:
     """Temporary-spacer format: lanes are exactly ``bits`` wide (Fig. 5)."""
     return SAMDFormat(bits, bits, signed, word_bits)
 
 
-def perm_format(bits: int, signed: bool = True, word_bits: int = 32) -> SAMDFormat:
+def perm_format(
+    bits: int, signed: bool = True, word_bits: int = 32
+) -> SAMDFormat:
     """One permanent spacer bit in the MSB of each lane (Fig. 2 / §6.1)."""
     return SAMDFormat(bits, bits + 1, signed, word_bits)
 
 
-def scale_format(bits: int, signed: bool = True, word_bits: int = 32) -> SAMDFormat:
+def scale_format(
+    bits: int, signed: bool = True, word_bits: int = 32
+) -> SAMDFormat:
     """Vector-scale format: b value bits + b spacer bits per lane (Fig. 8)."""
     return SAMDFormat(bits, 2 * bits, signed, word_bits)
 
@@ -126,7 +134,9 @@ def conv_lane_width(
     import math
 
     if paper_compat:
-        return 2 * bits + max(1, math.ceil(math.log2(taps))) if taps > 1 else 2 * bits
+        if taps > 1:
+            return 2 * bits + max(1, math.ceil(math.log2(taps)))
+        return 2 * bits
     if signed:
         max_mag = taps * (1 << (bits - 1)) * (1 << (bits - 1)) + 1  # +1 borrow
         lane = 1
@@ -178,7 +188,8 @@ def pack(values: jax.Array, fmt: SAMDFormat) -> jax.Array:
         v = jnp.pad(v, [(0, 0)] * (v.ndim - 1) + [(0, pad)])
     v = v.reshape(v.shape[:-1] + (nw, k))
     v = v.astype(fmt.dtype) & fmt.const((1 << fmt.bits) - 1)
-    shifts = (jnp.arange(k, dtype=fmt.dtype) * fmt.lane_width).astype(fmt.dtype)
+    lw = fmt.lane_width
+    shifts = (jnp.arange(k, dtype=fmt.dtype) * lw).astype(fmt.dtype)
     words = jnp.bitwise_or.reduce(v << shifts, axis=-1)
     return words.astype(fmt.dtype)
 
@@ -189,7 +200,8 @@ def unpack(words: jax.Array, fmt: SAMDFormat, n: int) -> jax.Array:
     Reads the low ``fmt.bits`` of each lane; sign-extends when signed.
     """
     k = fmt.lanes_per_word
-    shifts = (jnp.arange(k, dtype=fmt.dtype) * fmt.lane_width).astype(fmt.dtype)
+    lw = fmt.lane_width
+    shifts = (jnp.arange(k, dtype=fmt.dtype) * lw).astype(fmt.dtype)
     lanes = (words[..., None] >> shifts) & fmt.const((1 << fmt.bits) - 1)
     lanes = lanes.reshape(lanes.shape[:-2] + (-1,))[..., :n]
     out = lanes.astype(jnp.int32)
@@ -206,7 +218,8 @@ def unpack_lanes_wide(words: jax.Array, fmt: SAMDFormat, n: int) -> jax.Array:
     Sign-extends over ``fmt.lane_width`` bits when signed.
     """
     k = fmt.lanes_per_word
-    shifts = (jnp.arange(k, dtype=fmt.dtype) * fmt.lane_width).astype(fmt.dtype)
+    lw = fmt.lane_width
+    shifts = (jnp.arange(k, dtype=fmt.dtype) * lw).astype(fmt.dtype)
     lanes = (words[..., None] >> shifts) & fmt.const(
         (1 << fmt.lane_width) - 1
     )
@@ -304,7 +317,9 @@ def sign_extend_for_mul(vec: jax.Array, fmt: SAMDFormat) -> jax.Array:
 # Vector scale (paper §4)
 # ---------------------------------------------------------------------------
 
-def vector_scale_perm(vec: jax.Array, scalar: jax.Array, fmt: SAMDFormat) -> jax.Array:
+def vector_scale_perm(
+    vec: jax.Array, scalar: jax.Array, fmt: SAMDFormat
+) -> jax.Array:
     """Multiply every lane by one scalar using a single native multiply
     (Fig. 8). ``fmt`` must be a scale/conv format (>= b spacer bits).
 
@@ -359,7 +374,9 @@ def correct_signed_product_perm(prod: jax.Array, fmt: SAMDFormat) -> jax.Array:
     return prod + msb
 
 
-def unpack_signed_product(prod: jax.Array, fmt: SAMDFormat, n: int) -> jax.Array:
+def unpack_signed_product(
+    prod: jax.Array, fmt: SAMDFormat, n: int
+) -> jax.Array:
     """Read ``n`` wide lanes out of a signed SAMD product, borrow-corrected.
 
     The safe entry point for reading product words: a raw signed product is

@@ -100,7 +100,8 @@ def compress_tree(grads, residuals, bits: int = 8):
             outs.append(dequantize_int8(q, scale).astype(g.dtype))
         else:
             outs.append(
-                dequantize_int4_packed(q, scale, g.size, g.shape).astype(g.dtype)
+                dequantize_int4_packed(q, scale, g.size, g.shape)
+                .astype(g.dtype)
             )
         new_res.append(nr)
     return treedef.unflatten(outs), treedef.unflatten(new_res)

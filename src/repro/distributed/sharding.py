@@ -226,11 +226,12 @@ def cache_pspecs(cfg: ArchConfig, shape: ShapeConfig, mesh: Mesh,
 
         h, _ = rwkv6_dims(cfg)
         h_ax = "model" if h % model == 0 else None
+        shift_ax = "model" if cfg.d_model % model == 0 else None
         layers = [
             {
                 "wkv": P(baxes, h_ax, None, None),
-                "shift_tm": P(baxes, "model" if cfg.d_model % model == 0 else None),
-                "shift_cm": P(baxes, "model" if cfg.d_model % model == 0 else None),
+                "shift_tm": P(baxes, shift_ax),
+                "shift_cm": P(baxes, shift_ax),
             }
             for _ in range(cfg.n_layers)
         ]

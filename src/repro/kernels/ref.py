@@ -95,5 +95,6 @@ def conv1d_int_ref(x: jax.Array, kernel: jax.Array) -> jax.Array:
     xp = jnp.pad(x, [(0, 0)] * (x.ndim - 1) + [(taps - 1, taps - 1)])
     out = jnp.zeros(x.shape[:-1] + (n + taps - 1,), jnp.int32)
     for j in range(taps):
-        out = out + kernel[..., j] * xp[..., taps - 1 - j + jnp.arange(n + taps - 1)]
+        idx = taps - 1 - j + jnp.arange(n + taps - 1)
+        out = out + kernel[..., j] * xp[..., idx]
     return out

@@ -153,7 +153,7 @@ def _conv2d_kernel(*refs, kh_taps, kw_taps, ow, bits, lane_width, vpw,
             codes = unpack_codes(
                 w_ref[kh, kw], bits, lane_width, vpw, signed
             )                                            # [bc, bn]
-            patch = row[:, kw:kw + ow]                   # [bc, OW] static slice
+            patch = row[:, kw:kw + ow]  # [bc, OW] static slice
             acc = acc + jax.lax.dot_general(
                 patch, codes.astype(patch.dtype),
                 (((0,), (0,)), ((), ())),
@@ -217,8 +217,7 @@ def samd_conv2d(
     contractions.
     """
     c_in, h, w = x.shape
-    kh_taps, kw_taps, cw, n = packed.shape[0], packed.shape[1], \
-        packed.shape[2], packed.shape[3]
+    kh_taps, kw_taps, cw, n = packed.shape
     vpw = cfg.values_per_word
     assert cw * vpw >= c_in, (cw, vpw, c_in)
     oh = h + 2 * padding - kh_taps + 1

@@ -163,7 +163,9 @@ def cell_cost(cfg: ArchConfig, shape: ShapeConfig,
             full = cfg.n_layers * b * s * per_tok_kv
         elif cfg.family == "rwkv6":
             h, hd = rwkv6_dims(cfg)
-            full = cfg.n_layers * b * (h * hd * hd * 4.0 + 2 * cfg.d_model * 4.0)
+            full = cfg.n_layers * b * (
+                h * hd * hd * 4.0 + 2 * cfg.d_model * 4.0
+            )
         else:
             d_inner, n_heads, conv_dim = mamba2_dims(cfg)
             full = cfg.n_layers * b * (
@@ -171,8 +173,10 @@ def cell_cost(cfg: ArchConfig, shape: ShapeConfig,
                 + conv_dim * (cfg.ssm_conv - 1) * 2.0
             )
             if cfg.attn_every:
-                full += (cfg.n_layers // cfg.attn_every) * b * s * \
-                    2 * cfg.n_kv_heads * cfg.head_dim * kv_elem_bytes
+                full += (
+                    (cfg.n_layers // cfg.attn_every) * b * s * 2
+                    * cfg.n_kv_heads * cfg.head_dim * kv_elem_bytes
+                )
         if kind == "decode":
             cache_bytes = full * (2.0 if cfg.family in ("rwkv6",) else 1.0)
             # decode reads the whole cache once (attention) + writes new slot

@@ -40,6 +40,10 @@ from repro.optim.adamw import AdamWState  # noqa: E402
 from repro.quant.config import QuantConfig  # noqa: E402
 
 
+def _is_sds(x):
+    return isinstance(x, jax.ShapeDtypeStruct)
+
+
 def _sds_with_sharding(spec_tree, pspec_tree, mesh):
     """Attach NamedShardings to a ShapeDtypeStruct tree."""
 
@@ -177,10 +181,12 @@ def lower_cell(
             step,
             donate_argnums=(0, 1),
             out_shardings=(
-                jax.tree.map(lambda s: s.sharding, params_in,
-                             is_leaf=lambda x: isinstance(x, jax.ShapeDtypeStruct)),
-                jax.tree.map(lambda s: s.sharding, opt_in,
-                             is_leaf=lambda x: isinstance(x, jax.ShapeDtypeStruct)),
+                jax.tree.map(
+                    lambda s: s.sharding, params_in, is_leaf=_is_sds
+                ),
+                jax.tree.map(
+                    lambda s: s.sharding, opt_in, is_leaf=_is_sds
+                ),
                 metrics_sh,
             ),
         ).lower(params_in, opt_in, batch_in)
@@ -205,8 +211,9 @@ def lower_cell(
             donate_argnums=(2,),
             out_shardings=(
                 NamedSharding(mesh, P(bspec[0])),
-                jax.tree.map(lambda s: s.sharding, cache_in,
-                             is_leaf=lambda x: isinstance(x, jax.ShapeDtypeStruct)),
+                jax.tree.map(
+                    lambda s: s.sharding, cache_in, is_leaf=_is_sds
+                ),
             ),
         ).lower(params_in, batch_in, cache_in)
     else:  # decode
@@ -228,8 +235,9 @@ def lower_cell(
             donate_argnums=(2,),
             out_shardings=(
                 NamedSharding(mesh, P(bspec[0])),
-                jax.tree.map(lambda s: s.sharding, cache_in,
-                             is_leaf=lambda x: isinstance(x, jax.ShapeDtypeStruct)),
+                jax.tree.map(
+                    lambda s: s.sharding, cache_in, is_leaf=_is_sds
+                ),
             ),
         ).lower(params_in, tok_in, cache_in, pos_in)
 

@@ -65,7 +65,9 @@ _COMP_START_RE = re.compile(r"^(ENTRY\s+)?%?([\w.\-]+)\s*\(.*\)\s*->.*\{")
 _WHILE_RE = re.compile(r"body=%?([\w.\-]+)")
 
 
-def parse_collectives(hlo_text: str, loop_multiplier: int = 1) -> CollectiveStats:
+def parse_collectives(
+    hlo_text: str, loop_multiplier: int = 1
+) -> CollectiveStats:
     """Sum operand sizes of every collective in (partitioned) HLO text.
 
     XLA reports a while/scan body once; collectives found inside a while

@@ -97,7 +97,11 @@ def main(argv=None):
         jstep = jax.jit(step_fn, donate_argnums=(0, 1))
 
     data = SyntheticLM(cfg.vocab, args.seq_len, args.batch, seed=args.seed)
-    ckpt = CheckpointManager(args.checkpoint_dir) if args.checkpoint_dir else None
+    ckpt = (
+        CheckpointManager(args.checkpoint_dir)
+        if args.checkpoint_dir
+        else None
+    )
 
     start_step = 0
     if ckpt and args.resume:

@@ -48,7 +48,8 @@ class QuantizedTensor:
         return self.orig_shape[self.axis]
 
     def tree_flatten(self):
-        return (self.packed, self.scale), (self.orig_shape, self.axis, self.cfg)
+        children = (self.packed, self.scale)
+        return children, (self.orig_shape, self.axis, self.cfg)
 
     @classmethod
     def tree_unflatten(cls, aux, children):
@@ -560,12 +561,13 @@ def moe_block(p: dict, x: jax.Array, cfg, *, group_tokens: int = 2048):
     combine = jnp.zeros((ng, gt, e, cap), jnp.float32)
     counts = jnp.zeros((ng, e), jnp.int32)
     for slot in range(k):
-        mask = jax.nn.one_hot(gate_idx[..., slot], e, dtype=jnp.int32)  # [ng,gt,e]
+        # [ng,gt,e]
+        mask = jax.nn.one_hot(gate_idx[..., slot], e, dtype=jnp.int32)
         pos = jnp.cumsum(mask, axis=1) - 1 + counts[:, None, :]
         counts = counts + jnp.sum(mask, axis=1)
         keep = (pos < cap) & (mask > 0)
         pos_oh = jax.nn.one_hot(jnp.where(keep, pos, cap), cap + 1,
-                                dtype=jnp.bfloat16)[..., :cap]      # [ng,gt,e,cap]
+                                dtype=jnp.bfloat16)[..., :cap]  # [ng,gt,e,cap]
         sel = pos_oh * mask[..., None].astype(jnp.bfloat16)
         dispatch = dispatch + sel
         combine = combine + sel.astype(jnp.float32) * gate_vals[

@@ -48,7 +48,8 @@ def _causal_conv1d(x: jax.Array, w: jax.Array, prev: jax.Array | None):
     xp = jnp.concatenate([prev, xt], axis=-1)  # [B, C, T+K-1]
     y = jnp.zeros((b, c, t), jnp.float32)
     for i in range(k):
-        y = y + xp[:, :, i : i + t].astype(jnp.float32) * w[:, i][None, :, None].astype(jnp.float32)
+        wi = w[:, i][None, :, None].astype(jnp.float32)
+        y = y + xp[:, :, i : i + t].astype(jnp.float32) * wi
     new_prev = xp[:, :, t:]
     return jnp.moveaxis(y.astype(x.dtype), 1, 2), new_prev
 
@@ -70,14 +71,16 @@ def ssd_chunked(xdt, bmat, cmat, loga, s0, chunk: int = 128):
         xc, bc, cc, lc = inp                    # [B,C,...]
         big_l = jnp.cumsum(lc, axis=1)          # [B,C,H] inclusive
         cb = jnp.einsum("btn,bun->btu", cc, bc)  # [B,C,C]
-        diff = big_l[:, :, None, :] - big_l[:, None, :, :]   # [B,t,u,H] <=0 for u<=t
+        # [B,t,u,H] <=0 for u<=t
+        diff = big_l[:, :, None, :] - big_l[:, None, :, :]
         tri = jnp.tril(jnp.ones((c, c), bool))
         dec = jnp.exp(jnp.where(tri[None, :, :, None], diff, -jnp.inf))
         scores = cb[:, :, :, None] * dec                      # [B,t,u,H]
         y_intra = jnp.einsum("btuh,buhp->bthp", scores, xc)
-        y_inter = jnp.einsum("btn,bhpn->bthp", cc, s) * jnp.exp(big_l)[..., None]
+        y_inter = jnp.einsum("btn,bhpn->bthp", cc, s)
+        y_inter = y_inter * jnp.exp(big_l)[..., None]
         l_tot = big_l[:, -1]                                  # [B,H]
-        k_hat = jnp.exp(l_tot[:, None] - big_l)               # [B,C,H] <=0 exps
+        k_hat = jnp.exp(l_tot[:, None] - big_l)  # [B,C,H] <=0 exps
         s_new = s * jnp.exp(l_tot)[:, :, None, None] + jnp.einsum(
             "buhp,bun,buh->bhpn", xc, bc, k_hat
         )
@@ -111,7 +114,8 @@ def mamba2_block(p: dict, x: jax.Array, cfg, state: dict | None = None):
     xbc = jax.nn.silu(xbc.astype(jnp.float32)).astype(x.dtype)
     xs, bmat, cmat = jnp.split(xbc, [d_inner, d_inner + n], axis=-1)
 
-    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"].astype(jnp.float32))
+    dt_bias = p["dt_bias"].astype(jnp.float32)
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + dt_bias)
     a = -jnp.exp(p["a_log"].astype(jnp.float32))            # [H]
     loga = dt * a                                            # [B,T,H] <= 0
 

@@ -42,7 +42,8 @@ def adamw_init(params) -> AdamWState:
 
 def global_norm(tree) -> jax.Array:
     leaves = [
-        jnp.sum(jnp.square(g.astype(jnp.float32))) for g in jax.tree.leaves(tree)
+        jnp.sum(jnp.square(g.astype(jnp.float32)))
+        for g in jax.tree.leaves(tree)
     ]
     return jnp.sqrt(jnp.sum(jnp.stack(leaves)))
 
@@ -82,7 +83,10 @@ def adamw_update(
     flat_m = treedef.flatten_up_to(state.m)
     flat_v = treedef.flatten_up_to(state.v)
     flat_p = treedef.flatten_up_to(params)
-    out = [upd(g, m, v, p) for g, m, v, p in zip(flat_g, flat_m, flat_v, flat_p)]
+    out = [
+        upd(g, m, v, p)
+        for g, m, v, p in zip(flat_g, flat_m, flat_v, flat_p)
+    ]
     new_p = treedef.unflatten([o[0] for o in out])
     new_m = treedef.unflatten([o[1] for o in out])
     new_v = treedef.unflatten([o[2] for o in out])

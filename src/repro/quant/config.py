@@ -47,6 +47,19 @@ class QuantConfig:
     def __post_init__(self):
         if not (1 <= self.bits <= 16):
             raise ValueError(f"bits out of range: {self.bits}")
+        # Literal annotations are not enforced at runtime; a typo'd
+        # backend/spacer string would otherwise fall through dispatch
+        # silently. Fail at construction instead.
+        if self.backend not in ("xla", "pallas"):
+            raise ValueError(
+                f"unknown backend {self.backend!r}; known backends: "
+                "xla, pallas"
+            )
+        if self.spacer not in ("permanent", "temporary"):
+            raise ValueError(
+                f"unknown spacer regime {self.spacer!r}; known: "
+                "permanent, temporary"
+            )
 
 
 BF16 = QuantConfig(enabled=False)

@@ -35,7 +35,9 @@ def pack_weights(w: jax.Array, cfg: QuantConfig):
 
     Returns (packed uint32 [ceil(K/vpw), ...], scale f32).
     """
-    q, scale = quantize_symmetric(w, cfg.bits, axis=0, group_size=cfg.group_size)
+    q, scale = quantize_symmetric(
+        w, cfg.bits, axis=0, group_size=cfg.group_size
+    )
     fmt = _fmt(cfg)
     # move K last, pack it, move back
     qt = jnp.moveaxis(q, 0, -1)
@@ -137,5 +139,10 @@ def qmatmul(x: jax.Array, packed: jax.Array, scale: jax.Array, k: int,
         from repro.kernels import ops as kops
 
         return kops.samd_matmul(x, packed, scale, k, cfg)
+    if cfg.backend != "xla":
+        raise ValueError(
+            f"unknown QuantConfig backend {cfg.backend!r}; known "
+            "backends: xla, pallas"
+        )
     w = dequant_weights(packed, scale, k, cfg, dtype=x.dtype)
     return jnp.matmul(x, w, precision=precision)

@@ -31,7 +31,9 @@ def quantize_symmetric(w: jax.Array, bits: int, axis: int = 0,
     return q, scale.astype(jnp.float32)
 
 
-def dequantize(q: jax.Array, scale: jax.Array, dtype=jnp.bfloat16) -> jax.Array:
+def dequantize(
+    q: jax.Array, scale: jax.Array, dtype=jnp.bfloat16
+) -> jax.Array:
     return (q.astype(jnp.float32) * scale).astype(dtype)
 
 

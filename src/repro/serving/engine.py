@@ -249,8 +249,10 @@ class PageAllocator:
     def claim_reserved(self, n: int = 1) -> list:
         """Convert previously reserved pages into real ones (never fails:
         the reservation guarantees them)."""
-        assert 0 <= n <= self.reserved \
+        assert (
+            0 <= n <= self.reserved
             <= len(self._free) + len(self._retained)
+        )
         self.reserved -= n
         return self._grant(n)
 
@@ -325,7 +327,8 @@ class ServingEngine:
                  prefix_sharing: bool = True,
                  prefix_retain: Optional[int] = None,
                  speculative: int = 0,
-                 draft_quant: QuantConfig | None = None):
+                 draft_quant: QuantConfig | None = None,
+                 verify: bool = True):
         assert decode_mode in ("ragged", "per_row"), decode_mode
         assert admission in ("reserve", "optimistic"), admission
         assert paged_attn in ("fused", "gather"), paged_attn
@@ -392,13 +395,21 @@ class ServingEngine:
                 # through kernels.ops.samd_matmul (Mosaic on TPU, the
                 # unrolled K-block lowering on CPU) instead of
                 # dequantize-then-matmul — the draft reads packed bytes
-                dq = draft_quant if draft_quant is not None \
+                dq = (
+                    draft_quant
+                    if draft_quant is not None
                     else QuantConfig(bits=4, backend="pallas")
+                )
                 self.draft_quant = dq
                 self._draft_params = (
                     quantize_params(raw_params, template, dq)
                     if dq.enabled else self.params
                 )
+        if verify:
+            # admission-time lane safety: every (bits, K) tuple the packed
+            # weights will actually accumulate over — target and draft —
+            # must be certified safe before the engine serves a request.
+            self._verify_lane_safety()
         run = RunConfig(arch=cfg,
                         shape=ShapeConfig("serve", max_len, max_batch,
                                           "decode"),
@@ -491,6 +502,31 @@ class ServingEngine:
             "peak_pages_used": 0,       # max pages with refcount > 0
         }
 
+    def _verify_lane_safety(self):
+        """Admission-time static check: walk the packed parameter trees
+        (target and, when speculative, the draft) and certify every
+        (QuantConfig, reduction-depth) tuple with the lane-safety
+        analyzer. Raises ``LaneSafetyError`` — the engine refuses to
+        come up on a quantization it cannot prove safe."""
+        from repro.analysis import contracts
+
+        checks = []
+        if self.quant.enabled:
+            checks.append((self.quant, self.params))
+        dq = getattr(self, "draft_quant", None)
+        if (
+            self.speculative
+            and dq is not None
+            and dq.enabled
+            and dq is not self.quant
+        ):
+            checks.append((dq, self._draft_params))
+        for qcfg, tree in checks:
+            for k in contracts.packed_reduction_depths(tree):
+                contracts.assert_safe(
+                    contracts.check_matmul_config(qcfg, k)
+                )
+
     def _init_cache(self):
         if self.kv_mode == "paged":
             return init_paged_cache(self.cfg, self.num_pages, self.page_size,
@@ -534,8 +570,11 @@ class ServingEngine:
     def _eff_prompt(req: Request) -> np.ndarray:
         """The tokens this admission must make resident: the original
         prompt, or (recompute-resume) prompt + already-generated tokens."""
-        src = req.resume_prompt if req.resume_prompt is not None \
+        src = (
+            req.resume_prompt
+            if req.resume_prompt is not None
             else req.prompt
+        )
         return np.asarray(src, np.int32)
 
     def _register_block(self, eff: np.ndarray, b: int, page: int) -> bool:
@@ -769,10 +808,12 @@ class ServingEngine:
         tables also expose the shared prefix pages, so suffix queries
         attend across the whole prompt)."""
         lens = [len(e) - s for e, s in zip(effs, starts)]
-        assert all(ln >= 1 for ln, s in zip(lens, starts) if s), \
-            "sharing must leave >= 1 token to prefill"
-        assert max(len(e) for e in effs) < self.max_len, \
-            "admission rejects over-long prompts"
+        assert all(
+            ln >= 1 for ln, s in zip(lens, starts) if s
+        ), "sharing must leave >= 1 token to prefill"
+        assert (
+            max(len(e) for e in effs) < self.max_len
+        ), "admission rejects over-long prompts"
         lb = _bucket_len(max(lens), self.max_len)
         nb = self.max_batch
         tokens = np.zeros((nb, lb), np.int32)
@@ -1211,8 +1252,9 @@ class ServingEngine:
 
     def run_to_completion(self, max_ticks: int = 10_000):
         ticks = 0
-        while (self.queue or any(s is not None for s in self.slots)) \
-                and ticks < max_ticks:
+        while (
+            self.queue or any(s is not None for s in self.slots)
+        ) and ticks < max_ticks:
             self.step()
             ticks += 1
         return self.finished

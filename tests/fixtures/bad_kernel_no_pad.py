@@ -1,0 +1,45 @@
+"""Deliberately-broken Pallas kernel: samd-lint mutation fixture.
+
+This file is NOT imported by anything. tests/test_samd_lint.py points
+the linter at it and asserts the seeded violations are flagged:
+
+* the grid's K dimension is ``pl.cdiv`` (ragged) and the kernel carries
+  an accumulator in VMEM scratch across K steps, but the operands are
+  never zero-padded to whole blocks -> SL003;
+* the x BlockSpec index map multiplies the grid index by the block size
+  (element offset, not block index) -> SL002;
+* the scale BlockSpec index map takes 2 args against a rank-3 grid ->
+  SL001.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _kernel(x_ref, w_ref, s_ref, o_ref, acc_ref):
+    acc_ref[...] += jnp.dot(
+        x_ref[...].astype(jnp.float32), w_ref[...].astype(jnp.float32)
+    )
+    o_ref[...] = acc_ref[...] * s_ref[...]
+
+
+def bad_matmul(x, packed, scale, *, bm=128, bn=256, bkw=128):
+    m, kw = x.shape
+    _, n = packed.shape
+    grid = (pl.cdiv(m, bm), pl.cdiv(n, bn), pl.cdiv(kw, bkw))
+    return pl.pallas_call(
+        functools.partial(_kernel),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, bkw), lambda i, j, kk: (i * bm, kk)),
+            pl.BlockSpec((bkw, bn), lambda i, j, kk: (kk, j)),
+            pl.BlockSpec((1, bn), lambda i, j: (0, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), x.dtype),
+        scratch_shapes=[pltpu.VMEM((bm, bn), jnp.float32)],
+    )(x, packed, scale)

@@ -1,0 +1,293 @@
+"""Lane-safety verifier (repro.analysis): interpreter + contracts +
+trace-time / admission-time enforcement."""
+import json
+import types
+
+import numpy as np
+import pytest
+
+import repro.analysis as A
+from repro.analysis import contracts
+from repro.core.conv import ConvPlan
+from repro.core.samd import SAMDFormat, conv_lane_width
+from repro.quant.config import QuantConfig
+
+
+# ---------------------------------------------------------------------------
+# the abstract interpreter
+# ---------------------------------------------------------------------------
+
+
+def test_verdict_is_machine_readable():
+    v = A.check_matmul_config(QuantConfig(bits=4), 4608)
+    d = v.to_dict()
+    json.dumps(d)  # serializable
+    assert d["status"] == A.SAFE
+    assert d["bits"] == 4 and d["depth"] == 4608
+    assert v.ok and v.headroom_bits >= 0
+    assert "safe" in str(v)
+
+
+def test_storage_lanes_safe_across_bits():
+    for bits in (2, 4, 8):
+        for signed in (True, False):
+            v = A.check_matmul_config(
+                QuantConfig(bits=bits), 4608, signed=signed
+            )
+            assert v.ok, str(v)
+
+
+def test_interpreter_matches_paper_lane_width():
+    """The interpreter's verdict at the paper's Table-2 lane width must
+    be safe, and one bit narrower must need exactly one spacer bit —
+    ``conv_lane_width`` and the abstract interpreter are two derivations
+    of the same §5-§7 bound."""
+    for bits in (2, 3, 4):
+        for taps in (2, 3, 5):
+            for signed in (True, False):
+                lane = conv_lane_width(bits, taps, signed)
+                if taps * lane > 32:
+                    continue
+                ok = A.check_accumulation(
+                    SAMDFormat(bits, lane, signed), 1, taps=taps
+                )
+                assert ok.ok, str(ok)
+                if lane - 1 >= bits:
+                    bad = A.check_accumulation(
+                        SAMDFormat(bits, lane - 1, signed), 1, taps=taps
+                    )
+                    assert bad.status == A.NEEDS_SPACER, str(bad)
+                    assert bad.spacer_bits_needed >= 1
+
+
+def test_constant_kernel_tightens_bound():
+    """§7 reuse: a known kernel with small tap sums certifies a lane the
+    generic worst case rejects."""
+    fmt = SAMDFormat(4, 6, False)
+    generic = A.check_accumulation(fmt, 1, taps=3)
+    assert generic.status == A.NEEDS_SPACER
+    known = A.check_accumulation(fmt, 1, kernel=np.array([1, 1, 1]))
+    assert known.ok, str(known)
+    # 3 taps of 15*1 = 45 -> 6 unsigned bits exactly
+    assert known.required_lane_width == 6
+
+
+def test_accumulate_scales_interval():
+    fmt = SAMDFormat(4, 12, False)
+    assert A.check_accumulation(fmt, 1, taps=3).ok
+    deep = A.check_accumulation(fmt, 8, taps=3)
+    assert deep.status == A.NEEDS_SPACER
+    # 8 * 3 * 225 = 5400 needs 13 unsigned bits: one bit short
+    assert deep.required_lane_width == 13
+    assert deep.spacer_bits_needed == 1
+
+
+def test_shift_right_narrows():
+    """The capacity check is per-op (the wide value physically sits in
+    the lane before any rescale), but a shift narrows the interval for
+    everything downstream: a second accumulation that would overflow
+    unshifted fits after ``>> 4``."""
+    fmt = SAMDFormat(4, 13, False)
+    head = [A.Pack(), A.MulKernel(taps=3), A.Accumulate(8)]  # [0, 5400]
+    v = A.interpret(fmt, head + [A.ShiftRight(4), A.Accumulate(16),
+                                 A.ReadWide()])
+    assert v.ok, str(v)  # (5400 >> 4) * 16 = 5392 fits 13 bits
+    unshifted = A.interpret(fmt, head + [A.Accumulate(16), A.ReadWide()])
+    assert unshifted.status == A.NEEDS_SPACER
+
+
+def test_signed_multiply_requires_sign_extension():
+    fmt = SAMDFormat(4, 9, True)
+    with pytest.raises(ValueError, match="sign_extend_for_mul"):
+        A.interpret(fmt, [A.Pack(), A.MulKernel(taps=3), A.ReadWide()])
+
+
+def test_pack_wider_than_value_field_rejected():
+    fmt = SAMDFormat(4, 9, True)
+    with pytest.raises(ValueError, match="wider than format"):
+        A.interpret(fmt, [A.Pack(bits=6)])
+
+
+def test_unknown_op_rejected():
+    with pytest.raises(TypeError):
+        A.interpret(SAMDFormat(4, 9, True), [object()])
+
+
+# ---------------------------------------------------------------------------
+# contracts
+# ---------------------------------------------------------------------------
+
+
+def test_f32_accumulator_contract():
+    """With quantized activations the blocked kernels' f32 accumulator
+    has a real depth limit (24 mantissa bits)."""
+    unsafe = contracts.check_matmul_config(
+        QuantConfig(bits=8, act_bits=8), 4608
+    )
+    assert unsafe.status == A.NEEDS_SPACER
+    assert unsafe.spacer_bits_needed > 0
+    assert "float32" in unsafe.detail
+    safe = contracts.check_matmul_config(
+        QuantConfig(bits=4, act_bits=8), 4608
+    )
+    assert safe.ok, str(safe)
+    # boundary: exact at the advertised depth, unsafe one doubling later
+    depth = contracts._f32_exact_depth(QuantConfig(bits=8, act_bits=8), True)
+    assert contracts.check_matmul_config(
+        QuantConfig(bits=8, act_bits=8), depth
+    ).ok
+    assert not contracts.check_matmul_config(
+        QuantConfig(bits=8, act_bits=8), 4 * depth
+    ).ok
+
+
+def test_check_conv2d_uses_full_fan_in():
+    a = contracts.check_conv2d_config(
+        QuantConfig(bits=8, act_bits=8), 3, 3, 512
+    )
+    b = contracts.check_matmul_config(
+        QuantConfig(bits=8, act_bits=8), 9 * 512
+    )
+    assert a.status == b.status and a.depth == b.depth
+
+
+def test_check_conv_plan_paths():
+    lane = conv_lane_width(4, 3, True)
+    plan = ConvPlan(SAMDFormat(4, lane, True), 3)
+    assert contracts.check_conv_plan(plan).ok
+    assert contracts.check_conv_plan(
+        plan, kernel=np.array([1, -1, 1])
+    ).ok
+    squeezed = ConvPlan(SAMDFormat(4, lane, True), 3)
+    deep = contracts.check_conv_plan(squeezed, channels=64)
+    assert deep.status == A.NEEDS_SPACER
+
+
+def test_assert_safe_raises_with_verdict():
+    bad = contracts.check_matmul_config(
+        QuantConfig(bits=8, act_bits=8), 1 << 20
+    )
+    with pytest.raises(A.LaneSafetyError) as ei:
+        contracts.assert_safe(bad)
+    assert ei.value.verdict.status == A.NEEDS_SPACER
+
+
+def test_vmem_estimates():
+    cfg = QuantConfig(bits=4)
+    small = contracts.matmul_vmem_bytes(
+        cfg, block_m=128, block_n=256, block_kw=128
+    )
+    big = contracts.matmul_vmem_bytes(
+        cfg, block_m=256, block_n=512, block_kw=256
+    )
+    assert small < big
+    # the shipped kernel defaults fit the TPU budget
+    assert small <= contracts.vmem_limit("tpu")
+    assert contracts.conv2d_vmem_bytes(
+        cfg, w_img=224
+    ) <= contracts.vmem_limit("tpu")
+
+
+def test_model_reduction_depths():
+    from repro.configs import smoke_config
+    from repro.models.model import build_template
+
+    cfg = smoke_config("qwen1.5-0.5b")
+    depths = contracts.model_reduction_depths(build_template(cfg))
+    assert depths, "smoke model has quantizable weights"
+    assert all(isinstance(k, int) and k > 0 for k in depths)
+    assert cfg.d_model in depths
+    floor = contracts.model_reduction_depths(
+        build_template(cfg), respect_min_size=True
+    )
+    assert set(floor) <= set(depths)
+
+
+# ---------------------------------------------------------------------------
+# enforcement wiring: trace time (ops) + admission (engine)
+# ---------------------------------------------------------------------------
+
+
+def test_ops_verify_raises_before_tracing():
+    from repro.kernels import ops as kops
+
+    dummy = np.zeros((2, 2), np.float32)
+    with pytest.raises(A.LaneSafetyError):
+        kops.samd_matmul(
+            dummy, dummy, dummy, 1 << 20,
+            QuantConfig(bits=8, act_bits=8),
+        )
+
+
+def test_ops_unknown_backend_lists_known():
+    from repro.kernels import ops as kops
+
+    dummy = np.zeros((2, 2), np.float32)
+    with pytest.raises(ValueError, match="xla, pallas"):
+        kops.samd_matmul(
+            dummy, dummy, dummy, 8, QuantConfig(bits=4), backend="cuda"
+        )
+    with pytest.raises(ValueError, match="known backends"):
+        kops.samd_conv2d(
+            dummy, np.zeros((3, 3, 1, 4), np.uint32), dummy,
+            QuantConfig(bits=4), backend="tpu", verify=False,
+        )
+
+
+def test_quantconfig_validates_strings():
+    with pytest.raises(ValueError, match="known backends"):
+        QuantConfig(backend="cuda")
+    with pytest.raises(ValueError, match="spacer"):
+        QuantConfig(spacer="none")
+
+
+def test_engine_admission_check():
+    """_verify_lane_safety walks the packed trees and refuses an unsafe
+    (QuantConfig, K) tuple — exercised on a stand-in engine so the test
+    does not pay for jit compilation."""
+    from repro.models.layers import QuantizedTensor
+    from repro.quant.packing import pack_weights
+    from repro.serving.engine import ServingEngine
+
+    k = 4608
+    w = np.random.default_rng(0).normal(size=(k, 8)).astype(np.float32)
+
+    def packed_tree(cfg):
+        packed, scale = pack_weights(np.asarray(w), cfg)
+        return {
+            "w": QuantizedTensor(packed, scale, (k, 8), 0, cfg)
+        }
+
+    safe_cfg = QuantConfig(bits=4, backend="pallas")
+    eng = types.SimpleNamespace(
+        quant=safe_cfg, params=packed_tree(safe_cfg), speculative=0
+    )
+    ServingEngine._verify_lane_safety(eng)  # no raise
+
+    bad_cfg = QuantConfig(bits=8, act_bits=8)
+    eng = types.SimpleNamespace(
+        quant=QuantConfig(enabled=False),
+        params={},
+        speculative=2,
+        draft_quant=bad_cfg,
+        _draft_params=packed_tree(bad_cfg),
+    )
+    with pytest.raises(A.LaneSafetyError):
+        ServingEngine._verify_lane_safety(eng)
+
+
+def test_certify_sweep_is_green():
+    """The acceptance grid: every shipped configuration certifies."""
+    from pathlib import Path
+
+    from repro.analysis import certify
+
+    entries, failures = certify.run(Path("BENCH_serving.json"))
+    assert failures == 0, [
+        e for e in entries if e["status"] != "safe"
+    ][:3]
+    assert len(entries) >= 90  # 3 bits x 2 signedness x vggb + serving
+    # both sweeps present
+    names = {e["config"] for e in entries}
+    assert any(n.startswith("vggb/") for n in names)
+    assert any(n.startswith("serving/") for n in names)

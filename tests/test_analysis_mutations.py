@@ -1,0 +1,115 @@
+"""Mutation tests: the verifier must FAIL on bad inputs, not just pass
+on good ones. Three seeded violations, each asserted to produce the
+exact right verdict:
+
+1. spacer bit too narrow for the accumulation depth K
+       -> needs-spacer-bits with the correct deficit;
+2. missing signed borrow headroom (magnitude fits, §6 borrow does not)
+       -> needs-spacer-bits naming the borrow, and skipping the Fig. 12
+          fixup entirely -> borrow-fixup-missing;
+3. K-block not zero-padded in a blocked Pallas kernel
+       -> samd-lint SL003 on the seeded fixture (which also carries an
+          index-map arity and a block/element unit mutation).
+"""
+import importlib.util
+import sys
+from pathlib import Path
+
+import numpy as np
+
+import repro.analysis as A
+from repro.core.samd import SAMDFormat, conv_lane_width
+
+REPO = Path(__file__).resolve().parent.parent
+FIXTURE = Path(__file__).parent / "fixtures" / "bad_kernel_no_pad.py"
+
+
+def _load_samd_lint():
+    spec = importlib.util.spec_from_file_location(
+        "samd_lint", REPO / "tools" / "samd_lint.py"
+    )
+    mod = importlib.util.module_from_spec(spec)
+    sys.modules.setdefault("samd_lint", mod)
+    spec.loader.exec_module(mod)
+    return mod
+
+
+# -- mutation 1: spacer too narrow for K ------------------------------------
+
+
+def test_mutation_spacer_too_narrow_for_k():
+    # 4-bit unsigned, 12-bit lanes: 3 taps fit at depth 1 (675 <= 4095)
+    fmt = SAMDFormat(4, 12, False)
+    assert A.check_accumulation(fmt, 1, taps=3).ok
+    # ... but K=8 channel accumulation overflows: 5400 needs 13 bits
+    v = A.check_accumulation(fmt, 8, taps=3)
+    assert v.status == A.NEEDS_SPACER
+    assert v.spacer_bits_needed == 1
+    assert v.required_lane_width == 13
+    assert v.lane_hi == 8 * 3 * 15 * 15
+    assert "add 1 spacer bit" in v.detail
+
+
+def test_mutation_spacer_deficit_scales():
+    fmt = SAMDFormat(4, 12, False)
+    v = A.check_accumulation(fmt, 32, taps=3)  # 21600 -> 15 bits
+    assert v.status == A.NEEDS_SPACER
+    assert v.spacer_bits_needed == 3
+
+
+# -- mutation 2: missing signed borrow headroom -----------------------------
+
+
+def test_mutation_missing_borrow_headroom():
+    # identity kernel, 4-bit signed values in 4-bit lanes: the MAGNITUDE
+    # [-8, 7] fits exactly, but the §6 extraction borrow needs one unit
+    # below -8 -> 5 bits. The verdict must name the borrow.
+    fmt = SAMDFormat(4, 4, True, word_bits=32)
+    v = A.check_accumulation(fmt, 1, kernel=np.array([1]))
+    assert v.status == A.NEEDS_SPACER
+    assert v.spacer_bits_needed == 1
+    assert "borrow headroom" in v.detail
+    # one more lane bit and the same program is safe
+    ok = A.check_accumulation(
+        SAMDFormat(4, 5, True), 1, kernel=np.array([1])
+    )
+    assert ok.ok, str(ok)
+
+
+def test_mutation_skipped_borrow_fixup():
+    # a format with plenty of headroom, but the program never applies
+    # correct_signed_product before the wide read
+    lane = conv_lane_width(4, 3, True)
+    fmt = SAMDFormat(4, lane, True)
+    assert A.check_accumulation(fmt, 1, taps=3).ok
+    v = A.check_accumulation(fmt, 1, taps=3, fixup=False)
+    assert v.status == A.BORROW_MISSING
+    assert "unpack_signed_product" in v.detail
+    # unsigned formats have no borrow: fixup-free is still safe
+    lane_u = conv_lane_width(4, 3, False)
+    assert A.check_accumulation(
+        SAMDFormat(4, lane_u, False), 1, taps=3, fixup=False
+    ).ok
+
+
+# -- mutation 3: K-block not zero-padded (lint fixture) ---------------------
+
+
+def test_mutation_unpadded_k_block_flagged():
+    lint = _load_samd_lint()
+    violations, _ = lint.lint_paths([FIXTURE], lint.DEFAULT_CONFIG)
+    rules = {v.rule for v in violations}
+    assert "SL003" in rules, violations
+    sl3 = [v for v in violations if v.rule == "SL003"]
+    assert sl3[0].func == "bad_matmul"
+    assert "zero-padding" in sl3[0].message
+    # the fixture's two other seeded mutations are caught too
+    assert "SL001" in rules and "SL002" in rules
+
+
+def test_shipped_kernels_are_clean():
+    lint = _load_samd_lint()
+    violations, _ = lint.lint_paths(
+        [REPO / "src" / "repro" / "kernels"], lint.DEFAULT_CONFIG
+    )
+    assert violations == [], [str(v) for v in violations]

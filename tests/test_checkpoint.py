@@ -5,7 +5,11 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.checkpoint import CheckpointManager, load_checkpoint, save_checkpoint
+from repro.checkpoint import (
+    CheckpointManager,
+    load_checkpoint,
+    save_checkpoint,
+)
 
 
 def _tree(seed=0):

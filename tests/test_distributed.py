@@ -37,8 +37,9 @@ def test_logical_rules_divisibility_fallback():
 
 def test_serve_mode_drops_fsdp():
     mesh = FakeMesh(data=16, model=16)
-    ps_train = sh.logical_to_mesh(("embed", "ff"), (4096, 16384), mesh, "train")
-    ps_serve = sh.logical_to_mesh(("embed", "ff"), (4096, 16384), mesh, "serve")
+    shape = (4096, 16384)
+    ps_train = sh.logical_to_mesh(("embed", "ff"), shape, mesh, "train")
+    ps_serve = sh.logical_to_mesh(("embed", "ff"), shape, mesh, "serve")
     assert ps_train == P(("data",), "model")
     assert ps_serve == P(None, "model")
 

@@ -1,0 +1,67 @@
+"""launch/hlo_analysis.py collective-bytes parser: tuple-typed defs and
+sub-byte (s4/u4) operand dtypes — the previously-untested paths."""
+from repro.launch import hlo_analysis as H
+
+TUPLE_HLO = """\
+HloModule test
+
+ENTRY %main (p0: bf16[128,256]) -> bf16[256,256] {
+  %p0 = bf16[128,256] parameter(0)
+  %ag = (bf16[256,256], u32[]) all-gather-start(%p0), replica_groups={{0,1}}
+  %agd = bf16[256,256] all-gather-done(%ag)
+  %q = s4[64,64] convert(%agd)
+  %cp = s4[64,64] collective-permute(%q), source_target_pairs={{0,1}}
+  %uq = u4[32,32] convert(%agd)
+  %ar = u4[32,32] all-reduce(%uq), to_apply=%sum
+  ROOT %out = bf16[256,256] copy(%agd)
+}
+"""
+
+
+def test_tuple_typed_def_counts_all_elements():
+    """A tuple-typed def's size is the sum of its element shapes — the
+    async all-gather-start result carries both the gathered buffer and
+    the u32 context."""
+    assert H._shape_bytes("(bf16[256,256], u32[])") == 256 * 256 * 2 + 4
+    # scalar u32[] has empty dims: one element
+    assert H._shape_bytes("u32[]") == 4
+
+
+def test_collective_bytes_with_tuple_and_subbyte_operands():
+    stats = H.parse_collectives(TUPLE_HLO)
+    # all-gather: operand %p0 is bf16[128,256] (the -start is counted
+    # once, the -done is skipped)
+    assert stats.bytes_by_kind["all-gather"] == 128 * 256 * 2
+    assert stats.count_by_kind["all-gather"] == 1
+    # s4/u4 operands: 1 byte per element in the dtype table
+    assert stats.bytes_by_kind["collective-permute"] == 64 * 64 * 1
+    assert stats.bytes_by_kind["all-reduce"] == 32 * 32 * 1
+    assert stats.total_bytes == (
+        128 * 256 * 2 + 64 * 64 + 32 * 32
+    )
+
+
+def test_unknown_dtype_contributes_zero():
+    assert H._shape_bytes("token[]") == 0
+    assert H._shape_bytes("(bf16[4], token[])") == 8
+
+
+def test_loop_multiplier_scales_while_body_collectives():
+    hlo = """\
+%body (p: bf16[64]) -> bf16[64] {
+  %p = bf16[64] parameter(0)
+  %ar = bf16[64] all-reduce(%p), to_apply=%sum
+  ROOT %r = bf16[64] copy(%ar)
+}
+
+ENTRY %main (x: bf16[64]) -> bf16[64] {
+  %x = bf16[64] parameter(0)
+  %w = bf16[64] while(%x), condition=%cond, body=%body
+  ROOT %o = bf16[64] copy(%w)
+}
+"""
+    once = H.parse_collectives(hlo, loop_multiplier=1)
+    scanned = H.parse_collectives(hlo, loop_multiplier=12)
+    assert once.bytes_by_kind["all-reduce"] == 64 * 2
+    assert scanned.bytes_by_kind["all-reduce"] == 12 * 64 * 2
+    assert scanned.count_by_kind["all-reduce"] == 12

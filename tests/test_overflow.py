@@ -53,3 +53,95 @@ def test_plan_for_kernel_tightens_lanes():
     plan_small = overflow.plan_for_kernel(small_kernel, 3, True, 3)
     generic = overflow.generic_output_bits(3, 3, 3, True, True)
     assert plan_small.fmt.lane_width < generic
+
+
+# ---------------------------------------------------------------------------
+# edge cases (PR 7 satellite): all-zero kernels, single taps, the signed
+# borrow unit, and brute-force enumeration at tiny widths
+# ---------------------------------------------------------------------------
+
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+
+def test_all_zero_kernel():
+    kernel = np.zeros(5, np.int64)
+    for signed in (False, True):
+        assert overflow.conv_output_range(kernel, 4, signed) == (0, 0)
+    # a zero output still occupies one lane bit; signed inputs imply a
+    # packed-domain borrow slot but the range itself needs just 1 bit
+    assert overflow.conv_output_bits(kernel, 4, False) == 1
+    assert overflow.conv_output_bits(kernel, 4, True) == 1
+
+
+def test_single_tap_kernel():
+    for k in (-7, -1, 1, 7):
+        lo, hi = overflow.conv_output_range(np.array([k]), 3, True)
+        ins = (-4, 3)
+        vals = [k * v for v in ins]
+        assert (lo, hi) == (min(vals), max(vals))
+    # unsigned input, negative tap: range is entirely non-positive
+    lo, hi = overflow.conv_output_range(np.array([-3]), 3, False)
+    assert (lo, hi) == (-21, 0)
+
+
+def test_signed_extraction_headroom_unit():
+    """The identity kernel on signed b-bit input fits b bits by
+    magnitude, but conv_output_bits charges exactly one extra unit below
+    the minimum for the extraction borrow (Fig. 12 / §6)."""
+    for b in (2, 3, 4, 8):
+        bits = overflow.conv_output_bits(np.array([1]), b, True)
+        assert bits == b + 1
+    # unsigned input + non-negative kernel: no borrow, no extra bit
+    assert overflow.conv_output_bits(np.array([1]), 4, False) == 4
+
+
+def test_dot_range_general_interval():
+    """dot_range over an arbitrary interval (what the lane interpreter
+    feeds it) matches brute force."""
+    rng = np.random.default_rng(3)
+    for _ in range(20):
+        kernel = rng.integers(-4, 5, size=4)
+        lo_in, hi_in = sorted(rng.integers(-6, 7, size=2))
+        lo, hi = overflow.dot_range(kernel, int(lo_in), int(hi_in))
+        best_lo = sum(
+            int(k) * (lo_in if k > 0 else hi_in) for k in kernel
+        )
+        best_hi = sum(
+            int(k) * (hi_in if k > 0 else lo_in) for k in kernel
+        )
+        assert (lo, hi) == (best_lo, best_hi)
+
+
+@settings(max_examples=40, deadline=None)
+@given(
+    bits=st.integers(min_value=1, max_value=3),
+    taps=st.integers(min_value=1, max_value=4),
+    input_signed=st.booleans(),
+    seed=st.integers(min_value=0, max_value=999),
+)
+def test_range_matches_exhaustive_enumeration(
+    bits, taps, input_signed, seed
+):
+    """At tiny widths the whole input space is enumerable: the analysed
+    [lo, hi] must be EXACTLY the min/max over every input vector, not
+    just an upper bound."""
+    rng = np.random.default_rng(seed)
+    kernel = rng.integers(-3, 4, size=taps)
+    lo, hi = overflow.conv_output_range(kernel, bits, input_signed)
+    in_lo, in_hi = overflow.input_range(bits, input_signed)
+    span = np.arange(in_lo, in_hi + 1)
+    grids = np.meshgrid(*([span] * taps), indexing="ij")
+    vals = sum(
+        int(kernel[t]) * grids[t] for t in range(taps)
+    )
+    assert int(vals.min()) == lo
+    assert int(vals.max()) == hi
+    # the published lane width always covers the enumerated range plus
+    # the borrow unit whenever any operand lane is signed-packed
+    nbits = overflow.conv_output_bits(kernel, bits, input_signed)
+    if input_signed or (kernel < 0).any():
+        need = overflow.bits_required_signed(lo - 1, hi)
+    else:
+        need = overflow.bits_required_unsigned(hi)
+    assert nbits == need

@@ -1,0 +1,200 @@
+"""tools/samd_lint.py: the Pallas kernel contract linter (pass 2)."""
+import importlib.util
+import json
+import subprocess
+import sys
+import textwrap
+from pathlib import Path
+
+REPO = Path(__file__).resolve().parent.parent
+
+
+def _lint():
+    spec = importlib.util.spec_from_file_location(
+        "samd_lint", REPO / "tools" / "samd_lint.py"
+    )
+    mod = importlib.util.module_from_spec(spec)
+    sys.modules.setdefault("samd_lint", mod)
+    spec.loader.exec_module(mod)
+    return mod
+
+
+def _run(mod, source, tmp_path, config=None):
+    f = tmp_path / "kernel_under_test.py"
+    f.write_text(textwrap.dedent(source))
+    return mod.lint_paths([f], config or mod.DEFAULT_CONFIG)
+
+
+def test_source_tree_is_clean():
+    mod = _lint()
+    violations, _ = mod.lint_paths(
+        [REPO / "src", REPO / "benchmarks"], mod.DEFAULT_CONFIG
+    )
+    assert violations == [], [str(v) for v in violations]
+
+
+def test_prefetch_grid_spec_arity(tmp_path):
+    """PrefetchScalarGridSpec index maps take grid-rank +
+    num_scalar_prefetch args — the paged-attention shape. A map with
+    only grid-rank args must be flagged."""
+    mod = _lint()
+    violations, _ = _run(mod, """
+        import jax.numpy as jnp
+        from jax.experimental import pallas as pl
+        from jax.experimental.pallas import tpu as pltpu
+
+        def kernel(q, k_pages, o):
+            pass
+
+        def attn(q, k_pages, pt, pos, b, hkv, bh, n_pp):
+            grid = (b, hkv // bh, n_pp)
+
+            def q_map(i, hb, j):  # missing the 2 prefetch operands
+                return (i, hb, 0)
+
+            return pl.pallas_call(
+                kernel,
+                grid_spec=pltpu.PrefetchScalarGridSpec(
+                    num_scalar_prefetch=2,
+                    grid=grid,
+                    in_specs=[pl.BlockSpec((1, 8, 16), q_map)],
+                    out_specs=pl.BlockSpec((1, 8, 16), q_map),
+                ),
+                out_shape=None,
+            )(pt, pos, q, k_pages)
+    """, tmp_path)
+    # q_map feeds both in_specs and out_specs: flagged at each use
+    assert violations and {v.rule for v in violations} == {"SL001"}
+    assert "prefetch" in violations[0].message
+
+
+def test_arity_violation_detected(tmp_path):
+    mod = _lint()
+    violations, _ = _run(mod, """
+        from jax.experimental import pallas as pl
+        from jax.experimental.pallas import tpu as pltpu
+
+        def f(x, body):
+            grid = (4, 4)
+            return pl.pallas_call(
+                body, grid=grid,
+                in_specs=[pl.BlockSpec((8, 8), lambda i: (i, 0))],
+                out_specs=pl.BlockSpec((8, 8), lambda i, j: (i, j)),
+                out_shape=None,
+            )(x)
+    """, tmp_path)
+    assert [v.rule for v in violations] == ["SL001"]
+    assert "2" in violations[0].message
+
+
+def test_vmem_budget_violation(tmp_path):
+    mod = _lint()
+    violations, _ = _run(mod, """
+        import jax.numpy as jnp
+        from jax.experimental import pallas as pl
+        from jax.experimental.pallas import tpu as pltpu
+
+        def f(x, body):
+            return pl.pallas_call(
+                body, grid=(4,),
+                in_specs=[pl.BlockSpec((8,), lambda i: (i,))],
+                out_specs=pl.BlockSpec((8,), lambda i: (i,)),
+                out_shape=None,
+                scratch_shapes=[pltpu.VMEM((4096, 4096), jnp.float32)],
+            )(x)
+    """, tmp_path)
+    assert [v.rule for v in violations] == ["SL004"]
+    assert "budget" in violations[0].message
+
+
+def test_vmem_unbound_symbol_is_note_not_violation(tmp_path):
+    mod = _lint()
+    violations, notes = _run(mod, """
+        import jax.numpy as jnp
+        from jax.experimental import pallas as pl
+        from jax.experimental.pallas import tpu as pltpu
+
+        def f(x, body, mystery_dim):
+            return pl.pallas_call(
+                body, grid=(4,),
+                in_specs=[pl.BlockSpec((8,), lambda i: (i,))],
+                out_specs=pl.BlockSpec((8,), lambda i: (i,)),
+                out_shape=None,
+                scratch_shapes=[
+                    pltpu.VMEM((mystery_dim, 8), jnp.float32)
+                ],
+            )(x)
+    """, tmp_path)
+    assert violations == []
+    assert any("mystery_dim" in n for n in notes)
+
+
+def test_signed_wide_read_rule(tmp_path):
+    mod = _lint()
+    violations, _ = _run(mod, """
+        from repro.core.samd import unpack_lanes_wide
+
+        def raw_read(word, fmt, n):
+            return unpack_lanes_wide(word, fmt, n)
+    """, tmp_path)
+    assert [v.rule for v in violations] == ["SL005"]
+    violations, _ = _run(mod, """
+        from repro.core.samd import (
+            correct_signed_product, unpack_lanes_wide,
+        )
+
+        def fixed_read(word, fmt, n):
+            if fmt.signed:
+                word = correct_signed_product(word, fmt)
+            return unpack_lanes_wide(word, fmt, n)
+    """, tmp_path)
+    assert violations == []
+
+
+def test_sl003_exempt_list(tmp_path):
+    mod = _lint()
+    src = """
+        import jax.numpy as jnp
+        from jax.experimental import pallas as pl
+        from jax.experimental.pallas import tpu as pltpu
+
+        def masked_ragged(x, body, n, blk):
+            grid = (pl.cdiv(n, blk),)
+            return pl.pallas_call(
+                body, grid=grid,
+                in_specs=[pl.BlockSpec((8, 8), lambda i: (i, 0))],
+                out_specs=pl.BlockSpec((8, 8), lambda i: (i, 0)),
+                out_shape=None,
+                scratch_shapes=[pltpu.VMEM((8, 8), jnp.float32)],
+            )(x)
+    """
+    violations, _ = _run(mod, src, tmp_path)
+    assert [v.rule for v in violations] == ["SL003"]
+    config = dict(mod.DEFAULT_CONFIG)
+    config["sl003_exempt"] = [
+        ["kernel_under_test.py", "masked_ragged"]
+    ]
+    violations, _ = _run(mod, src, tmp_path, config)
+    assert violations == []
+
+
+def test_cli_json_and_exit_codes(tmp_path):
+    env_root = str(REPO)
+    clean = subprocess.run(
+        [sys.executable, "tools/samd_lint.py",
+         "src/repro/kernels", "--json"],
+        cwd=env_root, capture_output=True, text=True,
+    )
+    assert clean.returncode == 0, clean.stdout + clean.stderr
+    assert json.loads(clean.stdout)["violations"] == []
+
+    bad = subprocess.run(
+        [sys.executable, "tools/samd_lint.py",
+         "tests/fixtures/bad_kernel_no_pad.py", "--json"],
+        cwd=env_root, capture_output=True, text=True,
+    )
+    assert bad.returncode == 1
+    rules = {
+        v["rule"] for v in json.loads(bad.stdout)["violations"]
+    }
+    assert {"SL001", "SL002", "SL003"} <= rules

@@ -96,8 +96,9 @@ def test_mixed_position_tick_is_one_compiled_step(serving):
         eng.submit(Request(rid=i, prompt=(np.arange(3 + 3 * i) + i) % 256,
                            max_tokens=8))
     eng.step()  # admit + first decode tick
-    assert len(set(eng.slot_pos[eng.active].tolist())) > 1, \
-        "test setup should produce mixed positions"
+    assert (
+        len(set(eng.slot_pos[eng.active].tolist())) > 1
+    ), "test setup should produce mixed positions"
     before = dict(eng.stats)
     eng.step()
     assert eng.stats["decode_steps"] == before["decode_steps"] + 1
@@ -198,8 +199,9 @@ def test_paged_page_grants_cross_boundaries(serving):
     done = eng.run_to_completion()
     assert len(done) == 1 and len(done[0].generated) == 20
     assert eng.stats["page_grants"] > 0
-    assert eng._allocator.free_pages == eng.num_pages, \
-        "all pages must return to the free list on retirement"
+    assert (
+        eng._allocator.free_pages == eng.num_pages
+    ), "all pages must return to the free list on retirement"
     assert (eng.page_table == -1).all()
 
 
@@ -294,8 +296,9 @@ def test_paged_int8_kv_matches_ring_int8(serving):
 def test_fused_paged_attention_is_default(serving):
     eng = serving.engine(max_batch=2)
     assert eng.kv_mode == "paged"
-    assert eng.paged_attn == "fused", \
-        "the fused Pallas kernel must be the default paged decode path"
+    assert (
+        eng.paged_attn == "fused"
+    ), "the fused Pallas kernel must be the default paged decode path"
 
 
 def test_fused_paged_decode_token_identical_to_gather_reference(serving):
