@@ -17,6 +17,16 @@ When a benchmark's MEANING changes (e.g. a row's backend is swapped),
 rename the row rather than reusing the name: the gate must only ever
 compare like with like.
 
+The open-loop artifact (BENCH_openloop.json) diffs ``p99_tpot_ms``
+with ``--lower-is-better`` — and adds ``--guard-key reject_rate``.
+A guard key is the same rename rule enforced mechanically for a value
+the benchmark COMPUTES rather than the author names: an admission-policy
+change shifts how many requests are rejected, and rejecting more
+trivially buys lower latency for the survivors. When a row's guard
+value differs between baseline and head, the rows measure different
+surviving populations, so the gate reports the row as ``incomparable``
+and neither passes nor fails it.
+
 The same gate diffs the VGG-B kernel artifact (BENCH_vggb.json) with
 ``--metric us --lower-is-better``: those rows are best-of-N LATENCIES,
 so a regression is cur > base * (1 + threshold). The analytic model rows
@@ -52,7 +62,9 @@ def load_rows(path: str, metric: str) -> dict:
 
 
 def classify(baseline: dict, current: dict, threshold: float,
-             exclude: tuple = (), lower_is_better: bool = False):
+             exclude: tuple = (), lower_is_better: bool = False,
+             guard_base: dict | None = None,
+             guard_cur: dict | None = None):
     """One record per row: (name, base, cur, ratio, verdict). The SINGLE
     source of the gate's row classification — the console report, the
     exit code, and the markdown step summary all render from these, so
@@ -60,20 +72,35 @@ def classify(baseline: dict, current: dict, threshold: float,
 
     Verdicts: 'excluded' (name matches an ``exclude`` substring), 'new' /
     'removed' (present in only one artifact — reported, never gated),
+    'incomparable' (the row's guard value differs between the two
+    artifacts — reported, never gated; see ``guard_base``/``guard_cur``),
     'REGRESSION', 'OK'. By default higher is better (tokens/s): a row
     regresses when cur < base * (1 - threshold). With ``lower_is_better``
     (latency metrics like the vggb us rows) the test flips: a row
     regresses when cur > base * (1 + threshold).
+
+    ``guard_base`` / ``guard_cur`` map name -> guard value (e.g. the
+    open-loop rows' ``reject_rate``). A latency percentile is only
+    meaningful over a fixed surviving population: if admission rejects a
+    different fraction, the p99 is computed over different requests, so
+    diffing it compares nothing — the guard marks such pairs
+    incomparable instead of letting a policy change masquerade as a perf
+    win (or loss).
     """
+    guard_base = guard_base or {}
+    guard_cur = guard_cur or {}
     records = []
     for name in sorted(set(baseline) | set(current)):
         base, cur = baseline.get(name), current.get(name)
+        gb, gc = guard_base.get(name), guard_cur.get(name)
         if any(pat in name for pat in exclude):
             verdict, ratio = "excluded", None
         elif base is None:
             verdict, ratio = "new", None
         elif cur is None:
             verdict, ratio = "removed", None
+        elif gb is not None and gc is not None and abs(gb - gc) > 1e-12:
+            verdict, ratio = "incomparable", None
         else:
             ratio = cur / base if base else float("inf")
             if lower_is_better:
@@ -86,17 +113,27 @@ def classify(baseline: dict, current: dict, threshold: float,
 
 
 def compare(baseline: dict, current: dict, threshold: float,
-            exclude: tuple = (), lower_is_better: bool = False):
+            exclude: tuple = (), lower_is_better: bool = False,
+            guard_base: dict | None = None,
+            guard_cur: dict | None = None):
     """Returns (report_lines, regressions) rendered from ``classify``.
 
     Rows whose name contains any ``exclude`` substring are skipped; see
-    :func:`classify` for the regression rule in each direction."""
+    :func:`classify` for the regression rule in each direction and the
+    guard-key incomparability rule."""
     lines, regressions = [], []
     for name, base, cur, ratio, verdict in classify(baseline, current,
                                                     threshold, exclude,
-                                                    lower_is_better):
+                                                    lower_is_better,
+                                                    guard_base, guard_cur):
         if verdict == "excluded":
             lines.append(f"  {name}: excluded")
+        elif verdict == "incomparable":
+            lines.append(
+                f"  {name}: guard value differs "
+                f"({guard_base[name]:g} -> {guard_cur[name]:g}) — "
+                "incomparable, ignored"
+            )
         elif verdict == "new":
             lines.append(f"  {name}: new ({cur:.2f}) — ignored")
         elif verdict == "removed":
@@ -113,7 +150,9 @@ def compare(baseline: dict, current: dict, threshold: float,
 
 def markdown_report(baseline: dict, current: dict, threshold: float,
                     exclude: tuple = (), lower_is_better: bool = False,
-                    metric: str = "tokens/s") -> list[str]:
+                    metric: str = "tokens/s",
+                    guard_base: dict | None = None,
+                    guard_cur: dict | None = None) -> list[str]:
     """Baseline-vs-head comparison as GitHub-flavored markdown lines,
     rendered from the same ``classify`` records as the console gate."""
     direction = "lower is better" if lower_is_better else "higher is better"
@@ -125,10 +164,12 @@ def markdown_report(baseline: dict, current: dict, threshold: float,
         "| --- | ---: | ---: | ---: | --- |",
     ]
     pretty = {"new": "new — ignored", "removed": "removed — ignored",
+              "incomparable": "incomparable — guard differs, ignored",
               "REGRESSION": "**REGRESSION**"}
     for name, base, cur, ratio, verdict in classify(baseline, current,
                                                     threshold, exclude,
-                                                    lower_is_better):
+                                                    lower_is_better,
+                                                    guard_base, guard_cur):
         md.append(
             f"| {name} "
             f"| {'' if base is None else f'{base:.2f}'} "
@@ -167,6 +208,12 @@ def main(argv=None) -> int:
                     help="treat the metric as a latency (regression = "
                          "cur > base * (1 + threshold)); use for the "
                          "vggb us rows")
+    ap.add_argument("--guard-key", default=None,
+                    help="row field that must MATCH between baseline and "
+                         "head for the metric to be comparable (e.g. "
+                         "reject_rate for the openloop rows); rows where "
+                         "it differs are reported as incomparable and "
+                         "never gated")
     args = ap.parse_args(argv)
     exclude = tuple(args.exclude) if args.exclude else ("per_row",)
 
@@ -182,8 +229,13 @@ def main(argv=None) -> int:
         return 0
     baseline = load_rows(args.baseline, args.metric)
     current = load_rows(args.current, args.metric)
+    guard_base = guard_cur = None
+    if args.guard_key:
+        guard_base = load_rows(args.baseline, args.guard_key)
+        guard_cur = load_rows(args.current, args.guard_key)
     lines, regressions = compare(baseline, current, args.threshold, exclude,
-                                 args.lower_is_better)
+                                 args.lower_is_better,
+                                 guard_base, guard_cur)
     direction = (
         "lower is better" if args.lower_is_better else "higher is better"
     )
@@ -192,7 +244,8 @@ def main(argv=None) -> int:
     print("\n".join(lines))
     _write_summary(
         markdown_report(baseline, current, args.threshold, exclude,
-                        args.lower_is_better, metric=args.metric),
+                        args.lower_is_better, metric=args.metric,
+                        guard_base=guard_base, guard_cur=guard_cur),
         args.summary,
     )
     if regressions:

@@ -1,3 +1,23 @@
 from repro.serving.engine import PageAllocator, Request, ServingEngine
+from repro.serving.scheduler import (
+    FifoPolicy, QueueEntry, SchedulingPolicy, SloPolicy, make_policy,
+)
+from repro.serving.server import (
+    AsyncServer, RejectedRequest, RequestCost, TokenStream, price_request,
+)
 
-__all__ = ["PageAllocator", "Request", "ServingEngine"]
+__all__ = [
+    "AsyncServer",
+    "FifoPolicy",
+    "PageAllocator",
+    "QueueEntry",
+    "RejectedRequest",
+    "Request",
+    "RequestCost",
+    "SchedulingPolicy",
+    "ServingEngine",
+    "SloPolicy",
+    "TokenStream",
+    "make_policy",
+    "price_request",
+]

@@ -124,6 +124,7 @@ from __future__ import annotations
 
 import collections
 import dataclasses
+import time
 from typing import Optional
 
 import jax
@@ -148,11 +149,28 @@ class Request:
     generated: list = dataclasses.field(default_factory=list)
     # outcome flags (set by the engine):
     truncated: bool = False     # force-retired (cache/page-pool exhaustion)
-    error: Optional[str] = None  # rejected before prefill; no tokens
+    # error != None means the request did NOT complete normally: rejected
+    # before prefill ("queue full ...", "prompt length ...", "request
+    # needs ... pages"), or retired mid-flight when run_to_completion's
+    # tick budget ran out ("tick budget exhausted" — may carry partial
+    # ``generated`` tokens)
+    error: Optional[str] = None
     # engine-internal: set while a preempted request waits for
     # recompute-resume (prompt + already-generated tokens, re-prefilled
     # verbatim), and the admission sequence used as preemption priority
     resume_prompt: Optional[np.ndarray] = None
+    # observability timestamps (engine ``clock`` units, monotonic seconds
+    # by default; None until the event happens). The serving front door's
+    # metrics layer derives TTFT / TPOT / e2e latency from these:
+    #   t_submit      stamped by ``submit`` (arrival at the engine)
+    #   t_admit       first successful admission (prefill handoff);
+    #                 survives preemption-resume unchanged
+    #   t_first_token first generated token (prefill's handoff sample)
+    #   t_retire      retirement, any outcome (done/truncated/rejected)
+    t_submit: Optional[float] = None
+    t_admit: Optional[float] = None
+    t_first_token: Optional[float] = None
+    t_retire: Optional[float] = None
     _seq: int = -1
 
     @property
@@ -328,8 +346,11 @@ class ServingEngine:
                  prefix_retain: Optional[int] = None,
                  speculative: int = 0,
                  draft_quant: QuantConfig | None = None,
-                 verify: bool = True):
+                 verify: bool = True,
+                 max_queue: Optional[int] = None,
+                 clock=None):
         assert decode_mode in ("ragged", "per_row"), decode_mode
+        assert max_queue is None or max_queue >= 0, max_queue
         assert admission in ("reserve", "optimistic"), admission
         assert paged_attn in ("fused", "gather"), paged_attn
         assert speculative >= 0, speculative
@@ -452,6 +473,15 @@ class ServingEngine:
             )
         self.cache = self._init_cache()
         self._key = jax.random.PRNGKey(seed ^ 0x5EED)
+        # observability clock (injectable for deterministic tests) and
+        # queue bound: ``submit`` REJECTS — machine-readably, via
+        # ``Request.error`` — once ``max_queue`` requests wait, instead
+        # of growing the queue (and every queued prompt's host memory)
+        # without limit under open-loop overload. None = unbounded (the
+        # pre-front-door behavior). Preemption re-queues bypass the
+        # bound: an admitted request must never be bounced back out.
+        self.clock = clock if clock is not None else time.monotonic
+        self.max_queue = max_queue
         # host-side scheduler state (numpy; one device sync per tick)
         self.queue: collections.deque[Request] = collections.deque()
         self.slots: list[Optional[Request]] = [None] * max_batch
@@ -499,6 +529,8 @@ class ServingEngine:
             "preemptions": 0,           # slots preempted for recompute
             "oop_retired": 0,           # slots truncated on pool exhaustion
             "rejected": 0,              # requests refused before prefill
+            "rejected_queue_full": 0,   # subset of rejected: queue bound
+            "tick_budget_exhausted": 0,  # stragglers errored at max_ticks
             "peak_pages_used": 0,       # max pages with refcount > 0
         }
 
@@ -653,12 +685,32 @@ class ServingEngine:
 
     # -- admission ---------------------------------------------------------
     def submit(self, req: Request):
+        """Enqueue ``req`` — or, when the queue already holds
+        ``max_queue`` waiting requests, REJECT it with ``error`` set
+        ("queue full ...") instead of queueing unboundedly. Explicit
+        backpressure: under open-loop overload the pre-bound engine grew
+        ``queue`` (and every queued prompt's host memory) without limit,
+        and callers could not tell. In-flight requests and
+        already-queued ones are untouched by the rejection."""
+        if req.t_submit is None:
+            req.t_submit = self.clock()
+        if (self.max_queue is not None
+                and len(self.queue) >= self.max_queue):
+            self.stats["rejected_queue_full"] += 1
+            self._reject(
+                req,
+                f"queue full ({len(self.queue)} waiting, "
+                f"max_queue={self.max_queue})",
+            )
+            return
         self.queue.append(req)
 
     def _reject(self, req: Request, reason: str):
         """Finish a request without serving it (regression guard: a bad
         request must never take down in-flight traffic)."""
         req.error = reason
+        if req.t_retire is None:
+            req.t_retire = self.clock()
         self.finished.append(req)
         self.stats["rejected"] += 1
 
@@ -899,6 +951,8 @@ class ServingEngine:
         if req._seq < 0:
             self._seq_counter += 1
             req._seq = self._seq_counter
+        if req.t_admit is None:  # resume keeps the FIRST admission stamp
+            req.t_admit = self.clock()
         if req.resume_prompt is not None:
             req.resume_prompt = None
             self.slots[slot] = req
@@ -908,8 +962,11 @@ class ServingEngine:
             self._slot_seq[slot] = req._seq
             return
         req.generated.append(tok0)
+        if req.t_first_token is None:
+            req.t_first_token = self.clock()
         if req.done:
             self._release_pages(slot)
+            req.t_retire = self.clock()
             self.finished.append(req)
             return
         self.slots[slot] = req
@@ -953,6 +1010,8 @@ class ServingEngine:
 
     def _retire_slot(self, i: int, req: Request):
         self._release_pages(i)
+        if req.t_retire is None:
+            req.t_retire = self.clock()
         self.finished.append(req)
         self.slots[i] = None
         self.active[i] = False
@@ -1251,10 +1310,40 @@ class ServingEngine:
             self.stats[k] = 0
 
     def run_to_completion(self, max_ticks: int = 10_000):
+        """Tick until every submitted request retired, or ``max_ticks``.
+
+        Bugfix: hitting the tick budget used to return ``self.finished``
+        while SILENTLY DROPPING queued and in-flight requests — neither
+        ``truncated`` nor ``error`` set, so a hung engine was
+        indistinguishable from success. Stragglers are now retired with
+        ``error="tick budget exhausted"`` (in-flight ones keep their
+        partial ``generated`` tokens), counted in
+        ``stats["tick_budget_exhausted"]``, and every submitted request
+        is accounted for in the returned ``finished`` list."""
         ticks = 0
         while (
             self.queue or any(s is not None for s in self.slots)
         ) and ticks < max_ticks:
             self.step()
             ticks += 1
+        if self.queue or any(s is not None for s in self.slots):
+            self._exhaust_tick_budget()
         return self.finished
+
+    def _exhaust_tick_budget(self):
+        """Retire every straggler (in-flight slots first, then the
+        queue) with ``error`` set — the tick budget ran out."""
+        reason = "tick budget exhausted"
+        for i, req in enumerate(self.slots):
+            if req is None:
+                continue
+            req.error = reason
+            self.stats["tick_budget_exhausted"] += 1
+            self._retire_slot(i, req)
+        while self.queue:
+            req = self.queue.popleft()
+            req.error = reason
+            self.stats["tick_budget_exhausted"] += 1
+            if req.t_retire is None:
+                req.t_retire = self.clock()
+            self.finished.append(req)

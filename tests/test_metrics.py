@@ -1,0 +1,126 @@
+"""Serving metrics: latency math, histograms, Prometheus round-trip.
+
+Everything here runs on SYNTHETIC tick traces — Request objects stamped
+by hand with a virtual clock — so the latency definitions are pinned
+independently of any engine (and of wall time).
+"""
+import numpy as np
+import pytest
+
+from repro.serving import Request
+from repro.serving.metrics import (
+    DEFAULT_BUCKETS_S,
+    Histogram,
+    e2e_s,
+    parse_prometheus,
+    percentile,
+    render_prometheus,
+    summarize,
+    tpot_s,
+    ttft_s,
+)
+
+
+def _req(rid, submit, first, retire, n_tokens, error=None):
+    """One synthetic trace entry: stamps + generated tokens, no engine."""
+    r = Request(rid=rid, prompt=np.arange(4), max_tokens=n_tokens)
+    r.t_submit, r.t_first_token, r.t_retire = submit, first, retire
+    r.generated = list(range(n_tokens))
+    r.error = error
+    return r
+
+
+def test_latency_definitions_on_a_synthetic_trace():
+    # submit@1.0, first token@1.25, retire@2.25, 5 tokens -> 4 gaps
+    r = _req(0, 1.0, 1.25, 2.25, 5)
+    assert ttft_s(r) == pytest.approx(0.25)
+    assert tpot_s(r) == pytest.approx(1.0 / 4)
+    assert e2e_s(r) == pytest.approx(1.25)
+
+
+def test_latencies_none_when_stamps_or_gaps_missing():
+    # never produced a token: TTFT/TPOT undefined, not zero
+    r = _req(0, 1.0, None, 2.0, 0)
+    assert ttft_s(r) is None and tpot_s(r) is None
+    assert e2e_s(r) == pytest.approx(1.0)
+    # a single token has no inter-token gap
+    assert tpot_s(_req(1, 0.0, 0.5, 0.5, 1)) is None
+    # no retire stamp (still in flight)
+    assert e2e_s(_req(2, 0.0, 0.1, None, 3)) is None
+
+
+def test_percentile_empty_is_none_not_nan():
+    assert percentile([], 99) is None
+    assert percentile([7.0], 50) == 7.0
+    assert percentile([0.0, 10.0], 50) == pytest.approx(5.0)
+
+
+def test_summarize_counts_outcomes_and_deadline_misses():
+    reqs = [
+        _req(0, 0.0, 0.1, 1.0, 4),           # e2e 1.0 -> misses 0.5 SLO
+        _req(1, 0.0, 0.1, 0.4, 4),           # e2e 0.4 -> meets it
+        _req(2, 0.0, None, 0.0, 0, error="queue full"),
+    ]
+    s = summarize(reqs, slo_s=0.5)
+    assert s["n_requests"] == 3
+    assert s["completed"] == 2 and s["rejected"] == 1
+    assert s["reject_rate"] == pytest.approx(1 / 3)
+    assert s["deadline_misses"] == 1
+    # rejected requests must not pollute the latency percentiles
+    assert s["p50_e2e_ms"] == pytest.approx(700.0)
+    # without an SLO there is no miss count at all
+    assert "deadline_misses" not in summarize(reqs)
+
+
+def test_summarize_empty_input():
+    s = summarize([])
+    assert s["n_requests"] == 0 and s["reject_rate"] == 0.0
+    assert s["p99_tpot_ms"] is None
+
+
+def test_histogram_cumulative_buckets_and_inf_overflow():
+    h = Histogram(buckets_s=(0.1, 1.0, 10.0))
+    for v in (0.05, 0.5, 0.5, 5.0, 50.0):
+        h.observe(v)
+    assert h.count == 5
+    assert h.sum == pytest.approx(56.05)
+    lines = h.to_lines("lat_seconds")
+    # exposition buckets are CUMULATIVE, closing with +Inf == _count
+    assert 'lat_seconds_bucket{le="0.1"} 1' in lines
+    assert 'lat_seconds_bucket{le="1"} 3' in lines
+    assert 'lat_seconds_bucket{le="10"} 4' in lines
+    assert 'lat_seconds_bucket{le="+Inf"} 5' in lines
+    assert "lat_seconds_count 5" in lines
+
+
+def test_default_bucket_ladder_is_sorted_and_spans_serving_range():
+    assert list(DEFAULT_BUCKETS_S) == sorted(DEFAULT_BUCKETS_S)
+    assert DEFAULT_BUCKETS_S[0] <= 1e-4      # accelerator TPOT
+    assert DEFAULT_BUCKETS_S[-1] >= 10.0     # CPU smoke e2e
+
+
+def test_render_parse_round_trip():
+    h = Histogram(buckets_s=(0.5, 2.0))
+    h.observe(0.25)
+    h.observe(3.0)
+    text = render_prometheus(
+        counters={"samd_server_completed_total": 7},
+        gauges={"samd_server_queue_depth": 3},
+        histograms={"samd_request_ttft_seconds": h},
+    )
+    parsed = parse_prometheus(text)
+    assert parsed["samd_server_completed_total"] == 7.0
+    assert parsed["samd_server_queue_depth"] == 3.0
+    assert parsed['samd_request_ttft_seconds_bucket{le="0.5"}'] == 1.0
+    assert parsed['samd_request_ttft_seconds_bucket{le="+Inf"}'] == 2.0
+    assert parsed["samd_request_ttft_seconds_count"] == 2.0
+    assert parsed["samd_request_ttft_seconds_sum"] == pytest.approx(3.25)
+
+
+def test_parse_rejects_malformed_lines():
+    with pytest.raises(ValueError):
+        parse_prometheus("metric_without_value\n")
+    with pytest.raises(ValueError):
+        parse_prometheus("metric not_a_number\n")
+    # comments and blank lines are fine
+    assert parse_prometheus("# TYPE x counter\n\nx 1\n") == {"x": 1.0}

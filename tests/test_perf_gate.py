@@ -81,6 +81,53 @@ def test_markdown_report_covers_every_row_class():
     assert "| serving/per_row_x" in text and "excluded" in text
 
 
+def test_guard_key_marks_changed_populations_incomparable():
+    # p99 latency over DIFFERENT surviving populations (the reject rate
+    # moved) is not a comparison — the guard must keep a policy change
+    # from reading as a perf regression, and vice versa
+    base = {"openloop/load2.5x_slo": 4.0, "openloop/load2.5x_fifo": 6.0}
+    cur = {"openloop/load2.5x_slo": 9.0, "openloop/load2.5x_fifo": 9.0}
+    gb = {"openloop/load2.5x_slo": 0.26, "openloop/load2.5x_fifo": 0.0}
+    gc = {"openloop/load2.5x_slo": 0.54, "openloop/load2.5x_fifo": 0.0}
+    lines, regressions = compare(base, cur, threshold=0.20, exclude=(),
+                                 lower_is_better=True,
+                                 guard_base=gb, guard_cur=gc)
+    # the slo row's guard moved (0.26 -> 0.54): incomparable, not gated;
+    # the fifo row's guard matched, so its +50% latency still fails
+    assert [r[0] for r in regressions] == ["openloop/load2.5x_fifo"]
+    assert any("load2.5x_slo" in ln and "incomparable" in ln
+               for ln in lines)
+    # without the guard the same data double-fails
+    _, regressions = compare(base, cur, threshold=0.20, exclude=(),
+                             lower_is_better=True)
+    assert len(regressions) == 2
+    # markdown renders the verdict from the same classification
+    text = "\n".join(markdown_report(base, cur, 0.20, (),
+                                     lower_is_better=True,
+                                     guard_base=gb, guard_cur=gc))
+    assert "incomparable — guard differs" in text
+
+
+def test_guard_key_end_to_end(tmp_path):
+    def write(path, rows):
+        path.write_text(json.dumps({"table": "openloop", "rows": rows}))
+
+    base, cur = tmp_path / "base.json", tmp_path / "cur.json"
+    write(base, [{"name": "openloop/load2.5x_slo", "p99_tpot_ms": 4.0,
+                  "reject_rate": 0.26}])
+    write(cur, [{"name": "openloop/load2.5x_slo", "p99_tpot_ms": 9.0,
+                 "reject_rate": 0.54}])
+    args = ["--baseline", str(base), "--current", str(cur),
+            "--metric", "p99_tpot_ms", "--lower-is-better",
+            "--exclude", "per_row"]
+    assert main(args) == 1  # without the guard: +125% latency fails
+    assert main(args + ["--guard-key", "reject_rate"]) == 0
+    # matching guards still gate the metric
+    write(cur, [{"name": "openloop/load2.5x_slo", "p99_tpot_ms": 9.0,
+                 "reject_rate": 0.26}])
+    assert main(args + ["--guard-key", "reject_rate"]) == 1
+
+
 def test_gate_appends_step_summary_table(tmp_path):
     def write(path, rows):
         path.write_text(json.dumps({"table": "serving", "rows": rows}))

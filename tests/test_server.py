@@ -1,0 +1,159 @@
+"""Async front door: streaming, admission rejects, observability.
+
+Real engine, real event loop (``asyncio.run`` per test), tiny smoke
+model — these are integration tests for the request-level surface:
+tokens stream as they are generated, every refusal carries a
+machine-readable code, and submitted == completed + rejected always.
+"""
+import asyncio
+
+import numpy as np
+import pytest
+
+from repro.serving import AsyncServer, RejectedRequest, price_request
+from repro.serving.metrics import parse_prometheus
+
+
+async def _serve(server, specs):
+    """Submit ``(prompt, max_tokens)`` specs against a running server;
+    returns (collected token lists, rejections) in spec order."""
+    await server.start()
+    rejects = []
+    streams = []
+    for prompt, max_tokens in specs:
+        try:
+            streams.append(server.submit(prompt, max_tokens))
+        except RejectedRequest as rej:
+            rejects.append(rej)
+    outs = await asyncio.gather(*(s.collect() for s in streams))
+    await server.stop()
+    return outs, rejects
+
+
+def test_streams_match_engine_output_and_conservation(serving):
+    eng = serving.engine(max_batch=2)
+    server = AsyncServer(eng, policy="slo", max_queue=16)
+    rng = np.random.default_rng(0)
+    specs = [(rng.integers(0, 256, size=5 + i), 4 + i) for i in range(5)]
+    outs, rejects = asyncio.run(_serve(server, specs))
+    assert rejects == []
+    assert [len(o) for o in outs] == [4 + i for i in range(5)]
+    # the streamed tokens ARE the engine's generated tokens, in order
+    by_rid = {r.rid: r for r in server.finished}
+    assert len(by_rid) == 5
+    for req in server.finished:
+        assert req.error is None
+        # timestamps threaded through the engine, monotonic
+        assert (req.t_submit <= req.t_admit <= req.t_first_token
+                <= req.t_retire)
+    assert server.counters["submitted"] == 5
+    assert server.counters["admitted"] == 5
+    assert server.counters["completed"] == 5
+
+
+def test_queue_full_reject_is_immediate_and_machine_readable(serving):
+    eng = serving.engine(max_batch=2)
+    server = AsyncServer(eng, policy="fifo", max_queue=1)
+    # no serve loop running: the bound is enforced AT submit
+    server.submit(np.arange(5), 4)
+    with pytest.raises(RejectedRequest) as ei:
+        server.submit(np.arange(5), 4)
+    assert ei.value.code == "queue_full"
+    assert ei.value.as_dict()["code"] == "queue_full"
+    assert ei.value.request.error.startswith("queue_full:")
+    assert server.counters["rejected_queue_full"] == 1
+    # the refused request never entered the queue
+    assert server.queue_depth == 1
+
+
+def test_infeasible_rejects_price_before_queueing(serving):
+    eng = serving.engine(max_batch=2)  # max_len=64, paged
+    server = AsyncServer(eng, max_queue=16)
+    with pytest.raises(RejectedRequest) as ei:
+        server.submit(np.arange(64) % 256, 4)   # prompt >= max_len
+    assert ei.value.code == "infeasible"
+    assert "max_len" in ei.value.detail
+    assert server.counters["rejected_infeasible"] == 1
+    assert server.counters["admitted"] == 0
+
+    # a decode horizon needing more KV pages than the WHOLE pool is
+    # refused up front even though the prompt alone would fit
+    small = serving.engine(max_batch=2, kv_mode="paged", num_pages=2)
+    cost = price_request(small.cfg, small.quant, 10, 60,
+                         page_size=small.page_size,
+                         max_len=small.max_len)
+    assert cost.pages > small.num_pages
+    tiny_server = AsyncServer(small, max_queue=16)
+    with pytest.raises(RejectedRequest) as ei:
+        tiny_server.submit(np.arange(10), 60)
+    assert ei.value.code == "infeasible"
+    assert "pages" in ei.value.detail
+
+
+def test_slo_reject_prices_backlog_against_deadline(serving):
+    eng = serving.engine(max_batch=2)
+    # calibrated capacity of 1 token-equivalent/s with a 10ms deadline:
+    # even an empty server predicts completion far past the deadline
+    server = AsyncServer(eng, policy="slo", max_queue=16,
+                         default_slo_s=0.01, capacity_tokens_per_s=1.0)
+    with pytest.raises(RejectedRequest) as ei:
+        server.submit(np.arange(5), 4)
+    assert ei.value.code == "slo"
+    assert "deadline" in ei.value.detail
+    assert server.counters["rejected_slo"] == 1
+    assert server.counters["admitted"] == 0
+
+
+def test_slo_per_request_override(serving):
+    eng = serving.engine(max_batch=2)
+    server = AsyncServer(eng, policy="slo", max_queue=16,
+                         default_slo_s=0.01, capacity_tokens_per_s=1.0)
+    # loose per-request SLO overrides the hopeless default
+    stream = server.submit(np.arange(5), 3, slo_s=1e6)
+    assert server.counters["admitted"] == 1
+
+    async def run():
+        await server.start()
+        toks = await stream.collect()
+        await server.stop()
+        return toks
+
+    assert len(asyncio.run(run())) == 3
+
+
+def test_metrics_snapshot_parses_and_matches_counters(serving):
+    eng = serving.engine(max_batch=2)
+    server = AsyncServer(eng, max_queue=8)
+    specs = [(np.arange(6) % 256, 4), (np.arange(9) % 256, 3)]
+    asyncio.run(_serve(server, specs))
+    snap = parse_prometheus(server.metrics_snapshot())
+    assert snap["samd_server_completed_total"] == 2.0
+    assert snap["samd_server_submitted_total"] == 2.0
+    assert snap["samd_server_queue_depth"] == 0.0
+    assert snap["samd_engine_active_slots"] == 0.0
+    # paged engines expose pool gauges
+    assert "samd_engine_pages_free" in snap
+    # completed requests landed in all three latency histograms
+    for h in ("ttft", "tpot", "e2e"):
+        assert snap[f"samd_request_{h}_seconds_count"] >= 1.0
+    summ = server.summary()
+    assert summ["completed"] == 2 and summ["server_completed"] == 2
+    assert summ["p50_ttft_ms"] is not None
+
+
+def test_overload_sheds_at_admission_not_by_vanishing(serving):
+    """2.5x-style burst against a tiny queue: some requests refuse at
+    the bound, but completed + rejected always equals offered."""
+    eng = serving.engine(max_batch=2)
+    server = AsyncServer(eng, policy="slo", max_queue=2)
+    rng = np.random.default_rng(3)
+    specs = [(rng.integers(0, 256, size=6), 5) for _ in range(8)]
+    outs, rejects = asyncio.run(_serve(server, specs))
+    assert len(outs) + len(rejects) == 8
+    assert all(r.code == "queue_full" for r in rejects)
+    assert len(rejects) >= 1          # the burst outruns a queue of 2
+    assert server.counters["completed"] == len(outs)
+    assert (server.counters["rejected_queue_full"]
+            == len(rejects))
+    for o in outs:
+        assert len(o) == 5            # admitted requests run to term

@@ -432,3 +432,96 @@ def test_quantized_engine_close_to_fp(bits, serving):
     if bits == 8:
         assert agree >= 0.5, (ref, got)
     assert len(got) == len(ref)
+
+
+def test_tick_budget_exhaustion_accounts_for_every_request(serving):
+    """Regression: ``run_to_completion(max_ticks=N)`` used to return
+    ``finished`` while SILENTLY DROPPING whatever was still queued or
+    mid-decode — no error, no stats, a hung engine indistinguishable
+    from success. Stragglers must now retire with
+    ``error='tick budget exhausted'`` (keeping any partial tokens) and
+    be counted in ``stats['tick_budget_exhausted']``."""
+    eng = serving.engine(max_batch=2)
+    rng = np.random.default_rng(7)
+    for i in range(5):
+        eng.submit(Request(rid=i, prompt=rng.integers(0, 256, size=6),
+                           max_tokens=8))
+    # 2 ticks = prefill + one decode step for the first two slots: both
+    # slots mid-decode, three requests still queued when the budget ends
+    done = {r.rid: r for r in eng.run_to_completion(max_ticks=2)}
+    assert sorted(done) == [0, 1, 2, 3, 4]  # nobody vanishes
+    exhausted = [r for r in done.values()
+                 if r.error == "tick budget exhausted"]
+    assert len(exhausted) == 5
+    assert eng.stats["tick_budget_exhausted"] == 5
+    # the in-flight pair keeps its partial output; timestamps are closed
+    in_flight = [r for r in done.values() if r.generated]
+    assert len(in_flight) == 2
+    for r in done.values():
+        assert r.t_retire is not None
+    # the engine is reusable afterwards: slots and queue fully drained
+    assert not eng.queue and all(s is None for s in eng.slots)
+    eng.submit(Request(rid=9, prompt=np.arange(5) % 256, max_tokens=3))
+    assert eng.run_to_completion()[-1].error is None
+
+
+def test_tick_budget_not_charged_on_clean_completion(serving):
+    eng = serving.engine()
+    eng.submit(Request(rid=0, prompt=np.arange(5) % 256, max_tokens=3))
+    done = eng.run_to_completion()
+    assert done[0].error is None
+    assert eng.stats["tick_budget_exhausted"] == 0
+
+
+def test_max_queue_bounds_admission_without_touching_inflight(serving):
+    """Regression: ``submit`` accepted unboundedly — a misbehaving
+    client could queue gigabytes of prompts. With ``max_queue`` set,
+    overflow submissions are rejected with a machine-readable reason
+    while every in-flight AND already-queued request completes
+    untouched."""
+    eng = serving.engine(max_batch=2, max_queue=3)
+    rng = np.random.default_rng(11)
+    reqs = [Request(rid=i, prompt=rng.integers(0, 256, size=6),
+                    max_tokens=4) for i in range(8)]
+    for r in reqs[:2]:  # fill both slots
+        eng.submit(r)
+    eng.step()
+    assert all(s is not None for s in eng.slots)
+    for r in reqs[2:5]:  # fill the queue to its bound
+        eng.submit(r)
+    for r in reqs[5:]:  # overflow: rejected, not enqueued
+        eng.submit(r)
+    assert len(eng.queue) == 3
+    assert eng.stats["rejected_queue_full"] == 3
+    done = {r.rid: r for r in eng.run_to_completion()}
+    assert sorted(done) == list(range(8))
+    for rid in range(5):  # in-flight + queued all complete normally
+        assert done[rid].error is None, rid
+        assert len(done[rid].generated) == 4
+    for rid in range(5, 8):
+        assert "queue full" in done[rid].error
+        assert done[rid].generated == []
+
+
+def test_preemption_requeue_bypasses_max_queue_bound(serving):
+    """A preempted victim is ALREADY admitted — its recompute-resume
+    re-queue must never bounce off the ``max_queue`` admission bound
+    (that would turn preemption into a silent drop). Pool pressure
+    forces preemptions while the queue sits at its bound; every
+    admitted request must still complete in full."""
+    eng = serving.engine(
+        max_batch=2, kv_mode="paged", page_size=8, num_pages=6,
+        admission="optimistic", prefix_sharing=False, max_queue=1,
+    )
+    # interleave submit/step so each request is accepted while the
+    # queue is momentarily empty; the third then WAITS at the bound
+    for i in range(3):
+        eng.submit(Request(rid=i, prompt=(np.arange(12) + 17 * i) % 256,
+                           max_tokens=20))
+        eng.step()
+    done = {r.rid: r for r in eng.run_to_completion()}
+    assert eng.stats["preemptions"] > 0, eng.stats
+    assert eng.stats["rejected_queue_full"] == 0
+    assert sorted(done) == [0, 1, 2]
+    for r in done.values():
+        assert r.error is None and len(r.generated) == 20
